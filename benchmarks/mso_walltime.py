@@ -1,0 +1,82 @@
+"""Paper §5 wall-clock claim + §4 cost model — MSO micro-benchmark.
+
+Fixes a fitted GP (n training points) and times ONE acquisition
+optimization (B=10 restarts, LogEI) per strategy.  Validates:
+
+* C5 (cost model): batched eval cost O(B(n²+nD)) dominates the O(BmD) QN
+  update when n ≫ m — measured as eval-time share.
+* the 1.5×(vs SEQ.) / 1.1×(vs C-BE) wall-clock speedups of D-BE, and the
+  beyond-paper D-BE-vectorized device-resident variant.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import time                       # noqa: E402
+
+import jax.numpy as jnp           # noqa: E402
+import numpy as np                # noqa: E402
+
+from repro.core.acquisition import logei_acq          # noqa: E402
+from repro.core.mso import MsoOptions, maximize_acqf  # noqa: E402
+from repro.gp.fit import fit_gp, standardize          # noqa: E402
+
+
+def setup_gp(n: int, D: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    X = rng.uniform(0, 1, (n, D))
+    # high-frequency target -> short fitted lengthscales -> a wiggly,
+    # multi-modal LogEI surface that makes the QN solvers actually work
+    y = np.sin(8 * X).sum(1) + 0.3 * np.cos(13 * X[:, 0]) \
+        + 0.05 * rng.standard_normal(n)
+    y_std, _, _ = standardize(jnp.asarray(-y))
+    gp = fit_gp(jnp.asarray(X), y_std, n_restarts=2, pad_bucket=32)
+    return gp, float(jnp.max(y_std))
+
+
+def bench(n: int, D: int, B: int = 10, reps: int = 5, seed: int = 0):
+    gp, best = setup_gp(n, D, seed)
+    state = (gp, jnp.asarray(best))
+    rng = np.random.default_rng(seed + 1)
+    opts = MsoOptions(m=10, maxiter=200, pgtol=1e-5)
+    rows = []
+    for strategy in ("seq", "cbe", "dbe", "dbe_vec"):
+        walls, iters, rounds = [], [], []
+        for r in range(reps + 1):
+            x0 = rng.uniform(0, 1, (B, D))
+            res = maximize_acqf(logei_acq, x0, 0.0, 1.0, acq_state=state,
+                                strategy=strategy, options=opts)
+            if r == 0:
+                continue          # warm-up (jit compile)
+            walls.append(res.wall_time)
+            iters.append(float(np.median(res.n_iters)))
+            rounds.append(res.n_rounds)
+        rows.append({
+            "n": n, "D": D, "B": B, "strategy": strategy,
+            "wall_ms": 1e3 * float(np.median(walls)),
+            "med_iters": float(np.median(iters)),
+            "rounds": float(np.median(rounds)),
+        })
+    base = rows[0]["wall_ms"]
+    cbe = rows[1]["wall_ms"]
+    for r in rows:
+        r["speedup_vs_seq"] = base / r["wall_ms"]
+        r["speedup_vs_cbe"] = cbe / r["wall_ms"]
+        print(f"mso,n={r['n']},D={r['D']},{r['strategy']},"
+              f"wall={r['wall_ms']:.1f}ms,iters={r['med_iters']:.1f},"
+              f"rounds={r['rounds']:.0f},"
+              f"vs_seq={r['speedup_vs_seq']:.2f}x", flush=True)
+    return rows
+
+
+def main(full=False):
+    cases = [(64, 5), (192, 5), (192, 20)] if not full else \
+        [(64, 5), (128, 10), (192, 20), (288, 40)]
+    out = []
+    for n, D in cases:
+        out.extend(bench(n, D))
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.bo.space import BoxSpace
+from repro.bo.sampler import GPSampler
+from repro.bo.objectives import make_objective, OBJECTIVES

@@ -1,0 +1,175 @@
+"""GPSampler-style Bayesian-optimization controller (ask/tell).
+
+This is the Optuna-integration analogue the paper ships: each `ask` fits a
+Matérn-5/2 GP on the observations, builds LogEI, and runs multi-start
+L-BFGS-B with a pluggable MSO strategy (`seq` / `cbe` / `dbe` / `dbe_vec`).
+
+Fault tolerance at the controller level: every suggestion is journaled
+before being handed out; `tell` completes it; a crashed/preempted trial is
+simply re-suggested on resume (`GPSampler.load`).  The controller is the BO
+"control plane" driving the distributed trainer in `examples/hpo_train.py`.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.bo.space import BoxSpace
+from repro.core.acquisition import logei_acq
+from repro.core.mso import MsoOptions, MsoResult, maximize_acqf
+from repro.gp.fit import fit_gp, standardize
+
+
+@dataclass
+class Trial:
+    trial_id: int
+    x: np.ndarray
+    y: Optional[float] = None
+    state: str = "pending"           # pending | complete | failed
+    ask_time: float = 0.0
+    tell_time: float = 0.0
+
+
+@dataclass
+class SamplerStats:
+    n_gp_fits: int = 0
+    fit_time: float = 0.0
+    acqf_time: float = 0.0
+    acqf_iters: List[float] = field(default_factory=list)
+    acqf_rounds: List[int] = field(default_factory=list)
+
+
+class GPSampler:
+    """Ask/tell BO over a box space; strategy selects the MSO scheme."""
+
+    def __init__(
+        self,
+        space: BoxSpace,
+        *,
+        strategy: str = "dbe",
+        n_startup_trials: int = 10,
+        n_restarts: int = 10,
+        mso_options: MsoOptions = MsoOptions(),
+        seed: int = 0,
+        pad_multiple: int = 32,
+        gp_fit_restarts: int = 2,
+    ):
+        self.space = space
+        self.strategy = strategy
+        self.n_startup = n_startup_trials
+        self.B = n_restarts
+        self.mso_options = mso_options
+        self.rng = np.random.default_rng(seed)
+        self.seed = seed
+        self.pad_multiple = pad_multiple
+        self.gp_fit_restarts = gp_fit_restarts
+        self.trials: List[Trial] = []
+        self.stats = SamplerStats()
+        self.last_mso: Optional[MsoResult] = None
+
+    # ----------------------------------------------------------------- api
+    def ask(self) -> Trial:
+        n_done = sum(t.state == "complete" for t in self.trials)
+        if n_done < self.n_startup:
+            x = self.space.sample(self.rng, 1)[0]
+        else:
+            x = self._suggest()
+        t = Trial(trial_id=len(self.trials), x=x, ask_time=time.time())
+        self.trials.append(t)
+        return t
+
+    def tell(self, trial_id: int, y: float, *, failed: bool = False):
+        t = self.trials[trial_id]
+        t.y = None if failed else float(y)
+        t.state = "failed" if failed else "complete"
+        t.tell_time = time.time()
+
+    def best(self) -> Trial:
+        done = [t for t in self.trials if t.state == "complete"]
+        return min(done, key=lambda t: t.y)
+
+    def optimize(self, objective, n_trials: int):
+        for _ in range(n_trials):
+            t = self.ask()
+            try:
+                self.tell(t.trial_id, objective(t.x))
+            except Exception:
+                self.tell(t.trial_id, 0.0, failed=True)
+        return self.best()
+
+    # -------------------------------------------------------- inner engine
+    def _observations(self):
+        done = [t for t in self.trials if t.state == "complete"]
+        X = np.stack([t.x for t in done])
+        y = np.array([t.y for t in done])
+        return X, y
+
+    def _suggest(self) -> np.ndarray:
+        X, y = self._observations()
+        U = self.space.to_unit(X)
+        # minimize y == maximize -y (standardized)
+        t0 = time.perf_counter()
+        y_std, _, _ = standardize(jnp.asarray(-y))
+        gp = fit_gp(jnp.asarray(U), y_std, n_restarts=self.gp_fit_restarts,
+                    seed=self.seed + len(self.trials),
+                    pad_bucket=self.pad_multiple)
+        self.stats.n_gp_fits += 1
+        self.stats.fit_time += time.perf_counter() - t0
+
+        best_val = jnp.max(y_std)
+
+        # restart points: incumbent + (B-1) uniform (GPSampler-style)
+        inc = U[int(np.argmin(y))]
+        rand = self.rng.uniform(0.0, 1.0, (self.B - 1, self.space.dim))
+        x0 = np.concatenate([inc[None], rand], 0)
+
+        t0 = time.perf_counter()
+        res = maximize_acqf(logei_acq, x0, 0.0, 1.0,
+                            acq_state=(gp, best_val),
+                            strategy=self.strategy,
+                            options=self.mso_options)
+        self.stats.acqf_time += time.perf_counter() - t0
+        self.stats.acqf_iters.append(float(np.median(res.n_iters)))
+        self.stats.acqf_rounds.append(res.n_rounds)
+        self.last_mso = res
+        return self.space.from_unit(np.clip(res.best_x, 0.0, 1.0))
+
+    # ------------------------------------------------- journal (restart)
+    def save(self, path: str):
+        rec = {
+            "seed": self.seed,
+            "strategy": self.strategy,
+            "lower": self.space.lower.tolist(),
+            "upper": self.space.upper.tolist(),
+            "trials": [
+                dict(trial_id=t.trial_id, x=t.x.tolist(), y=t.y,
+                     state=t.state) for t in self.trials
+            ],
+        }
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(rec, f)
+        os.replace(tmp, path)        # atomic
+
+    @classmethod
+    def load(cls, path: str, **kwargs) -> "GPSampler":
+        with open(path) as f:
+            rec = json.load(f)
+        space = BoxSpace(np.array(rec["lower"]), np.array(rec["upper"]))
+        s = cls(space, strategy=rec["strategy"], seed=rec["seed"], **kwargs)
+        for tr in rec["trials"]:
+            t = Trial(trial_id=tr["trial_id"], x=np.array(tr["x"]),
+                      y=tr["y"], state=tr["state"])
+            if t.state == "pending":
+                # a trial that never came back (crash/preemption):
+                # mark failed; its parameters will be re-explored naturally.
+                t.state = "failed"
+            s.trials.append(t)
+        return s

@@ -1,0 +1,141 @@
+"""Checkpointing: atomic, async, mesh-independent (elastic) restore.
+
+* **Atomic** — write to ``<dir>/tmp.<step>`` then ``os.replace`` into place;
+  a crash mid-save never corrupts the latest checkpoint.
+* **Async**  — the device→host gather happens synchronously (cheap), the
+  file write runs on a daemon thread so the train loop keeps stepping.
+* **Elastic** — arrays are saved *unsharded* (global view) with their tree
+  paths as keys; restore `device_put`s onto whatever mesh/sharding the new
+  job uses — 512→256 chips or a different mesh shape is a non-event.
+* **Preemption** — `install_sigterm_handler` flips a flag the train loop
+  polls; the loop checkpoints and exits cleanly (see launch/train.py).
+"""
+from __future__ import annotations
+
+import os
+import re
+import signal
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(p) for p in path)
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def _unflatten_into(template, flat: Dict[str, np.ndarray]):
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths:
+        key = "/".join(str(p) for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        val = flat[key]
+        if tuple(val.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"shape mismatch at {key}: ckpt {val.shape} vs "
+                f"template {leaf.shape}")
+        leaves.append(val)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3,
+                 async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------- paths
+    def _path(self, step: int) -> str:
+        return os.path.join(self.dir, f"ckpt_{step:010d}.npz")
+
+    def all_steps(self) -> List[int]:
+        out = []
+        for f in os.listdir(self.dir):
+            m = re.match(r"ckpt_(\d+)\.npz$", f)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    # -------------------------------------------------------------- save
+    def save(self, step: int, tree, *, block: bool = False):
+        flat = _flatten(tree)            # sync device→host gather
+        self.wait()                      # one in-flight save at a time
+
+        def write():
+            tmp = os.path.join(self.dir, f".tmp_{step}_{os.getpid()}")
+            with open(tmp, "wb") as f:
+                np.savez(f, **flat)
+            os.replace(tmp, self._path(step))
+            self._gc()
+
+        if self.async_save and not block:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+        else:
+            write()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            try:
+                os.remove(self._path(s))
+            except OSError:
+                pass
+
+    # ----------------------------------------------------------- restore
+    def restore(self, step: int, template, *, shardings=None):
+        """Restore into ``template``'s structure; ``shardings`` (same
+        structure, optional) places leaves onto the *current* mesh —
+        this is the elastic-rescale path."""
+        with np.load(self._path(step)) as z:
+            flat = {k: z[k] for k in z.files}
+        tree = _unflatten_into(template, flat)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda x, s: jax.device_put(x, s), tree, shardings)
+        return tree
+
+
+# ---------------------------------------------------------------------------
+# preemption handling
+# ---------------------------------------------------------------------------
+
+class PreemptionFlag:
+    def __init__(self):
+        self._evt = threading.Event()
+
+    def set(self, *_):
+        self._evt.set()
+
+    @property
+    def triggered(self) -> bool:
+        return self._evt.is_set()
+
+
+def install_sigterm_handler() -> PreemptionFlag:
+    flag = PreemptionFlag()
+    signal.signal(signal.SIGTERM, flag.set)
+    signal.signal(signal.SIGUSR1, flag.set)
+    return flag

@@ -1,0 +1,7 @@
+from repro.core.lbfgsb import (LbfgsbOptions, LbfgsbResult, lbfgsb_minimize,
+                               bfgs_minimize, make_batched_value_and_grad,
+                               inv_hessian_dense, two_loop_direction)
+from repro.core.mso import (MsoOptions, MsoResult, maximize_acqf,
+                            maximize_acqf_closure, STRATEGIES)
+from repro.core.acquisition import (log_ei, log_h, ei, ucb, make_logei,
+                                    make_ucb, logei_acq, ucb_acq)

@@ -1,0 +1,113 @@
+"""Acquisition functions — numerically stable LogEI (Ament et al. 2023),
+EI, and UCB — plus the batched-evaluation closure used by every MSO
+strategy.
+
+The paper's experiment setting (§5): LogEI over a GP with Matérn-5/2,
+optimized by L-BFGS-B MSO.  ``make_logei`` returns the `(k, D) → (k,)`
+batched acquisition the MSO drivers consume.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.gp.gpr import GPState, predict
+
+Array = jax.Array
+
+_C1 = 0.5 * math.log(2.0 * math.pi)          # log √(2π)
+_INV_SQRT2PI = 1.0 / math.sqrt(2.0 * math.pi)
+
+
+def _log_phi(z):
+    return -0.5 * z * z - _C1
+
+
+_BRANCH = -25.0     # direct f64 eval is cancellation-safe above this
+
+
+def log_h(z: Array) -> Array:
+    """log(φ(z) + z·Φ(z)) — the LogEI kernel, stable over all z.
+
+    Branches (double-where guarded so gradients stay finite):
+      z > -25  : direct  log(φ(z) + zΦ(z)) — the cancellation error is
+                 ~eps·φ/h ≈ eps·z², still ≤1e-12 relative at z=-25 (f64);
+      z ≤ -25  : asymptotic from Φ(z) ~ φ(z)/(−z)·Σ(−1)ᵏ(2k−1)!!/z²ᵏ:
+                 log h = log φ − 2·log|z| + log1p(−3u + 15u² − 105u³),
+                 u = 1/z² (next term 945u⁴ ≤ 6e-9 at the branch point).
+    """
+    z_safe_hi = jnp.maximum(z, _BRANCH)         # direct-branch input
+    phi = jnp.exp(_log_phi(z_safe_hi))
+    # erfc keeps Φ relatively accurate in the far tail (0.5·(1+erf) has
+    # only absolute accuracy there, which the φ+zΦ cancellation amplifies)
+    Phi = 0.5 * jax.lax.erfc(-z_safe_hi / jnp.sqrt(2.0).astype(z.dtype))
+    direct_arg = jnp.maximum(phi + z_safe_hi * Phi, 1e-300)
+    direct = jnp.log(direct_arg)
+
+    z_safe_lo = jnp.minimum(z, _BRANCH)         # asymptotic-branch input
+    u = 1.0 / (z_safe_lo * z_safe_lo)
+    asym = (_log_phi(z_safe_lo) - 2.0 * jnp.log(-z_safe_lo)
+            + jnp.log1p(-3.0 * u + 15.0 * u * u - 105.0 * u * u * u))
+    return jnp.where(z > _BRANCH, direct, asym)
+
+
+def log_ei(mean: Array, var: Array, best: Array) -> Array:
+    """log E[max(0, μ − best)] under N(μ, σ²) — maximization convention."""
+    sigma = jnp.sqrt(var)
+    z = (mean - best) / sigma
+    return log_h(z) + 0.5 * jnp.log(var)
+
+
+def ei(mean: Array, var: Array, best: Array) -> Array:
+    sigma = jnp.sqrt(var)
+    z = (mean - best) / sigma
+    phi = jnp.exp(_log_phi(z))
+    Phi = 0.5 * jax.lax.erfc(-z / jnp.sqrt(2.0).astype(z.dtype))
+    return sigma * (phi + z * Phi)
+
+
+def ucb(mean: Array, var: Array, beta: float = 2.0) -> Array:
+    return mean + beta * jnp.sqrt(var)
+
+
+AcqBatched = Callable[[Array], Array]   # (k, D) -> (k,)
+
+
+def logei_acq(state, xb: Array) -> Array:
+    """State-form LogEI for the MSO layer: ``state = (GPState, best)``.
+
+    Module-level pure function ⇒ jit caches key on shapes only; the fitted
+    GP flows through as a traced pytree (no per-trial recompilation).
+    """
+    gp, best = state
+    mean, var = predict(gp, xb)
+    return log_ei(mean, var, best)
+
+
+def ucb_acq(state, xb: Array) -> Array:
+    """State-form UCB: ``state = (GPState, beta)``."""
+    gp, beta = state
+    mean, var = predict(gp, xb)
+    return mean + beta * jnp.sqrt(var)
+
+
+def make_logei(gp: GPState, best: float) -> AcqBatched:
+    """LogEI closure over a fitted GP (y standardized, maximization scale)."""
+    best = jnp.asarray(best, gp.y_train.dtype)
+
+    def acq(xb: Array) -> Array:
+        mean, var = predict(gp, xb)
+        return log_ei(mean, var, best)
+
+    return acq
+
+
+def make_ucb(gp: GPState, beta: float = 2.0) -> AcqBatched:
+    def acq(xb: Array) -> Array:
+        mean, var = predict(gp, xb)
+        return ucb(mean, var, beta)
+
+    return acq

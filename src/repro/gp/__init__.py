@@ -1,0 +1,5 @@
+from repro.gp.kernels import KernelParams, matern52, rbf, gram
+from repro.gp.gpr import (GPState, fit_gram, predict,
+                          log_marginal_likelihood,
+                          log_marginal_likelihood_masked, pad_gp)
+from repro.gp.fit import fit_gp, standardize

@@ -1,0 +1,139 @@
+"""GP hyperparameter fitting: MAP over log-parameters with our own batched
+L-BFGS-B — the framework eats its own dog food: the GP fit itself is a
+multi-start bound-constrained QN problem and runs through `core.lbfgsb`.
+
+Compilation discipline: observations are padded to size *buckets* and the
+whole fit (multi-start solver + final Cholesky) is one module-level jitted
+function taking data as *arguments* — so a 300-trial BO run compiles the fit
+a handful of times (once per bucket), not 300 times.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.linalg import cho_solve
+
+from repro.core.lbfgsb import LbfgsbOptions, lbfgsb_minimize
+from repro.gp.gpr import GPState, log_marginal_likelihood_masked
+from repro.gp.kernels import KernelParams, gram
+
+Array = jax.Array
+
+# Bounds on the log-hyperparameters (unit-cube-normalized x, standardized y).
+LOG_LS_BOUNDS = (-4.0, 4.0)
+LOG_AMP_BOUNDS = (-6.0, 6.0)
+LOG_NOISE_BOUNDS = (-10.0, 2.0)
+
+PAD_BUCKET = 32
+_FAR = 1e6          # padded pseudo-points live this far away (kernel → 0)
+
+
+def _pack(p: KernelParams) -> Array:
+    return jnp.concatenate([p.log_lengthscale,
+                            p.log_amplitude[None], p.log_noise[None]])
+
+
+def _unpack(theta: Array, dim: int) -> KernelParams:
+    return KernelParams(log_lengthscale=theta[:dim],
+                        log_amplitude=theta[dim],
+                        log_noise=theta[dim + 1])
+
+
+def _neg_map_objective(theta: Array, x: Array, y: Array, valid: Array,
+                       dim: int, kernel: str) -> Array:
+    p = _unpack(theta, dim)
+    lml = log_marginal_likelihood_masked(x, y, valid, p, kernel)
+    # weak log-normal priors keep the fit away from degenerate corners
+    prior = (-0.5 * jnp.sum((p.log_lengthscale / 2.0) ** 2)
+             - 0.5 * (p.log_amplitude / 2.0) ** 2
+             - 0.5 * ((p.log_noise + 4.0) / 2.0) ** 2)
+    return -(lml + prior)
+
+
+@functools.partial(jax.jit, static_argnames=("dim", "kernel", "opts"))
+def _fit_padded(x, y, valid, thetas, lower, upper, *, dim: int,
+                kernel: str, opts: LbfgsbOptions):
+    def single(theta):
+        return _neg_map_objective(theta, x, y, valid, dim, kernel)
+
+    vg = jax.vmap(jax.value_and_grad(single))
+    res = lbfgsb_minimize(lambda tb: vg(tb), thetas, lower, upper, opts)
+    theta_best = res.x[jnp.argmin(res.f)]
+    p = _unpack(theta_best, dim)
+
+    v = valid.astype(x.dtype)
+    K = gram(x, p, kernel)
+    K = K * (v[:, None] * v[None, :]) + jnp.diag(1.0 - v)
+    L = jnp.linalg.cholesky(K)
+    alpha = cho_solve((L, True), y * v)
+    return theta_best, L, alpha, res.k
+
+
+def fit_gp(
+    x: Array,
+    y: Array,
+    *,
+    kernel: str = "matern52",
+    n_restarts: int = 2,
+    init: Optional[KernelParams] = None,
+    seed: int = 0,
+    maxiter: int = 60,
+    pad_bucket: int = PAD_BUCKET,
+) -> GPState:
+    """Fit kernel hyperparameters by MAP (multi-start, batched L-BFGS-B).
+
+    Returns a GPState on the *padded* training set: padded α entries are 0
+    and padded points sit at kernel-underflow distance, so `predict` is
+    exact while every downstream consumer compiles once per size bucket.
+    """
+    n, dim = x.shape
+    dt = x.dtype
+
+    n_pad = (-n) % pad_bucket if pad_bucket else 0
+    if n_pad:
+        far = jnp.full((n_pad, dim), _FAR, dt) + \
+            jnp.arange(n_pad, dtype=dt)[:, None]
+        x = jnp.concatenate([x, far], 0)
+        y = jnp.concatenate([y, jnp.zeros((n_pad,), dt)], 0)
+    valid = (jnp.arange(n + n_pad) < n)
+
+    base = init if init is not None else KernelParams(
+        log_lengthscale=jnp.zeros((dim,), dt),
+        log_amplitude=jnp.zeros((), dt),
+        log_noise=jnp.asarray(-4.0, dt))
+    theta0 = _pack(base)
+    P = theta0.shape[0]
+
+    key = jax.random.PRNGKey(seed)
+    jitter0 = jax.random.uniform(key, (max(n_restarts - 1, 0), P), dt,
+                                 minval=-1.0, maxval=1.0)
+    thetas = jnp.concatenate([theta0[None], theta0[None] + jitter0], 0)
+
+    lower = jnp.concatenate([
+        jnp.full((dim,), LOG_LS_BOUNDS[0], dt),
+        jnp.asarray([LOG_AMP_BOUNDS[0]], dt),
+        jnp.asarray([LOG_NOISE_BOUNDS[0]], dt)])
+    upper = jnp.concatenate([
+        jnp.full((dim,), LOG_LS_BOUNDS[1], dt),
+        jnp.asarray([LOG_AMP_BOUNDS[1]], dt),
+        jnp.asarray([LOG_NOISE_BOUNDS[1]], dt)])
+
+    opts = LbfgsbOptions(m=10, maxiter=maxiter, pgtol=1e-5, ftol=1e-12)
+    theta_best, L, alpha, _ = _fit_padded(
+        x, y, valid, thetas,
+        jnp.broadcast_to(lower, thetas.shape),
+        jnp.broadcast_to(upper, thetas.shape),
+        dim=dim, kernel=kernel, opts=opts)
+
+    return GPState(x_train=x, y_train=y, params=_unpack(theta_best, dim),
+                   chol=L, alpha=alpha, kernel=kernel)
+
+
+def standardize(y: Array) -> Tuple[Array, Array, Array]:
+    """Return (y_std, mean, std) — GPSampler-style target standardization."""
+    mu = jnp.mean(y)
+    sd = jnp.maximum(jnp.std(y), 1e-10)
+    return (y - mu) / sd, mu, sd

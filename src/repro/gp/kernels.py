@@ -1,0 +1,82 @@
+"""GP covariance kernels (Matérn-5/2 with ARD, RBF) — pure jnp reference.
+
+The Pallas-tiled TPU implementations live in ``repro.kernels.matern``; these
+jnp versions are both the oracle for those kernels and the CPU execution
+path for the BO benchmarks.  The paper's GPSampler setting is Matérn-ν=5/2.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+SQRT5 = 2.2360679774997896
+
+
+class KernelParams(NamedTuple):
+    """Log-parameterized (unconstrained) ARD kernel hyperparameters."""
+    log_lengthscale: Array   # (D,)
+    log_amplitude: Array     # ()  log σ_f²  (variance, not std)
+    log_noise: Array         # ()  log σ_n²
+
+    @property
+    def lengthscale(self):
+        return jnp.exp(self.log_lengthscale)
+
+    @property
+    def amplitude(self):
+        return jnp.exp(self.log_amplitude)
+
+    @property
+    def noise(self):
+        return jnp.exp(self.log_noise)
+
+
+def init_params(dim: int, dtype=jnp.float64) -> KernelParams:
+    return KernelParams(
+        log_lengthscale=jnp.zeros((dim,), dtype),
+        log_amplitude=jnp.zeros((), dtype),
+        log_noise=jnp.asarray(-4.0, dtype),   # exp(-4) ≈ 1.8e-2
+    )
+
+
+def _sq_dists(x1: Array, x2: Array, inv_ls: Array) -> Array:
+    """Scaled squared distances, (n1, n2). Numerically clamped at 0."""
+    a = x1 * inv_ls
+    b = x2 * inv_ls
+    # ||a-b||^2 = |a|^2 + |b|^2 - 2ab ; clamp negatives from cancellation
+    d2 = (jnp.sum(a * a, -1)[:, None] + jnp.sum(b * b, -1)[None, :]
+          - 2.0 * (a @ b.T))
+    return jnp.maximum(d2, 0.0)
+
+
+def matern52(x1: Array, x2: Array, params: KernelParams) -> Array:
+    """Matérn-5/2 cross covariance, (n1, n2).
+
+    k(r) = σ_f² (1 + √5 r + 5r²/3) exp(-√5 r),  r = ||(x−x')/ℓ||.
+    """
+    inv_ls = jnp.exp(-params.log_lengthscale)
+    d2 = _sq_dists(x1, x2, inv_ls)
+    r = jnp.sqrt(d2 + 1e-36)          # eps keeps the gradient finite at r=0
+    poly = 1.0 + SQRT5 * r + (5.0 / 3.0) * d2
+    return params.amplitude * poly * jnp.exp(-SQRT5 * r)
+
+
+def rbf(x1: Array, x2: Array, params: KernelParams) -> Array:
+    inv_ls = jnp.exp(-params.log_lengthscale)
+    d2 = _sq_dists(x1, x2, inv_ls)
+    return params.amplitude * jnp.exp(-0.5 * d2)
+
+
+KERNELS = {"matern52": matern52, "rbf": rbf}
+
+
+def gram(x: Array, params: KernelParams, kernel: str = "matern52",
+         jitter: float = 1e-8) -> Array:
+    """Training gram matrix with noise + jitter on the diagonal."""
+    k = KERNELS[kernel](x, x, params)
+    n = x.shape[0]
+    return k + (params.noise + jitter) * jnp.eye(n, dtype=k.dtype)

@@ -1,0 +1,132 @@
+"""Flash attention (forward) as a Pallas TPU kernel.
+
+The LM substrate's prefill hot spot: O(S²·H) attention FLOPs at 32k context.
+Online-softmax streaming over KV tiles keeps the (S, S) score matrix out of
+HBM entirely — VMEM holds one (BLOCK_Q, BLOCK_K) score tile plus the running
+(BLOCK_Q, H) accumulator and max/sum statistics in scratch.
+
+Supports causal masking and RecurrentGemma-style local windows (query i sees
+keys in (i-window, i]).  Backward runs through XLA recompute (the dry-run
+path uses the pure-XLA attention anyway; this kernel is the TPU serving /
+prefill path, validated in interpret mode).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+                  *, scale: float, causal: bool, window: Optional[int],
+                  sk: int, sq: int, block_q: int, block_k: int):
+    """Grid = (q_tiles, k_tiles); the k axis is the streaming reduction."""
+    qi = pl.program_id(0)
+    kj = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[...].astype(jnp.float32)            # (BQ, H)
+    k = k_ref[...].astype(jnp.float32)            # (BK, H)
+    v = v_ref[...].astype(jnp.float32)            # (BK, H)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    # absolute positions, suffix-aligned: query row r of block qi sits at
+    # position (sk - sq) + qi*block_q + r — supports prefill-with-cache.
+    iq = (qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+          + (sk - sq))
+    ik = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = ik < sk                                # key padding
+    if causal:
+        mask &= ik <= iq
+    if window is not None:
+        mask &= ik > iq - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                           # (BQ, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)  # (BQ, BK)
+    corr = jnp.exp(m_prev - m_new)                # (BQ, 1)
+    l_ref[...] = corr * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = corr * acc_ref[...] + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kj == nk - 1)
+    def _finish():
+        l = l_ref[...]
+        o_ref[...] = (acc_ref[...] /
+                      jnp.where(l == 0.0, 1.0, l)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "block_q", "block_k",
+                     "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    scale: Optional[float] = None,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = False) -> jax.Array:
+    """Single-head flash attention.  q: (Sq, H), k/v: (Sk, H) → (Sq, H).
+
+    vmap over (batch, heads) for full layouts; H should be 128-aligned on
+    real TPU (the LM substrate's head dims are).
+    """
+    sq, h = q.shape
+    sk = k.shape[0]
+    scale = float(h ** -0.5) if scale is None else float(scale)
+
+    q_pad = (-sq) % block_q
+    k_pad = (-sk) % block_k
+    qp = jnp.pad(q, ((0, q_pad), (0, 0)))
+    kp = jnp.pad(k, ((0, k_pad), (0, 0)))
+    vp = jnp.pad(v, ((0, k_pad), (0, 0)))
+    SQ, SK = qp.shape[0], kp.shape[0]
+    grid = (SQ // block_q, SK // block_k)
+
+    kern = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        sk=sk, sq=sq, block_q=block_q, block_k=block_k)
+
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, h), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_k, h), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_k, h), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, h), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((SQ, h), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, h), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:sq]
+
+
+def flash_attention_bhsd(q, k, v, **kw):
+    """(B, H, S, D) convenience layout: vmap over batch and heads."""
+    fn = functools.partial(flash_attention, **kw)
+    return jax.vmap(jax.vmap(fn))(q, k, v)

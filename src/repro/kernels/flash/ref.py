@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for (optionally causal / local-windowed) attention."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: Optional[int] = None,
+                  scale: Optional[float] = None) -> jax.Array:
+    """q: (Sq, H), k/v: (Sk, H) — single head; vmap for batch/heads.
+
+    ``window``: local attention — query i sees keys in (i-window, i].
+    """
+    sq, h = q.shape
+    sk = k.shape[0]
+    scale = (h ** -0.5) if scale is None else scale
+    logits = (q @ k.T) * scale                                # (Sq, Sk)
+    iq = jnp.arange(sq)[:, None] + (sk - sq)                  # absolute q pos
+    ik = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= ik <= iq
+    if window is not None:
+        mask &= ik > iq - window
+    logits = jnp.where(mask, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)     # fully-masked rows
+    return p @ v

@@ -1,0 +1,86 @@
+"""Fused cross-kernel × vector product (GP posterior mean) in Pallas.
+
+Per batched acquisition evaluation D-BE issues ``mean = k(Xq, Xtr) @ α`` for
+the whole restart batch.  Materializing the (q, n) cross gram in HBM costs
+2·q·n·4 bytes of traffic it immediately re-reads; this kernel streams
+training-point tiles through VMEM and accumulates the matvec in-register,
+so HBM sees only the (q,) output — the memory-roofline-optimal form.
+
+Grid: (q_tiles, n_tiles); the n axis is the reduction — the output block
+index map ignores ``j``, so Pallas keeps the (TILE_Q, 1) accumulator in VMEM
+across the whole reduction sweep.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SQRT5 = 2.2360679774997896
+
+TILE_Q = 128
+TILE_N = 128
+
+
+def _kvp_kernel(q_ref, t_ref, qsq_ref, tsq_ref, alpha_ref, amp_ref, out_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    a = q_ref[...]                       # (TILE_Q, D)
+    b = t_ref[...]                       # (TILE_N, D)
+    ab = jax.lax.dot_general(a, b, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    d2 = qsq_ref[...] + tsq_ref[...].T - 2.0 * ab
+    d2 = jnp.maximum(d2, 0.0)
+    r = jnp.sqrt(d2 + 1e-36)
+    k = amp_ref[0, 0] * (1.0 + SQRT5 * r + (5.0 / 3.0) * d2) * \
+        jnp.exp(-SQRT5 * r)              # (TILE_Q, TILE_N)
+    out_ref[...] += k @ alpha_ref[...]   # (TILE_Q, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def kvp(xq: jax.Array, xt: jax.Array, alpha: jax.Array,
+        inv_lengthscale: jax.Array, amplitude: jax.Array,
+        *, interpret: bool = False) -> jax.Array:
+    """(q,) = matern52(xq, xt) @ alpha, cross gram never leaves VMEM."""
+    nq, d = xq.shape
+    nt = xt.shape[0]
+    dtype = xq.dtype
+
+    a = (xq * inv_lengthscale).astype(jnp.float32)
+    b = (xt * inv_lengthscale).astype(jnp.float32)
+    q_pad = (-nq) % TILE_Q
+    n_pad = (-nt) % TILE_N
+    a = jnp.pad(a, ((0, q_pad), (0, 0)))
+    # pad alpha with zeros: padded training points contribute nothing
+    b = jnp.pad(b, ((0, n_pad), (0, 0)))
+    al = jnp.pad(alpha.astype(jnp.float32), (0, n_pad)).reshape(-1, 1)
+    asq = jnp.sum(a * a, -1, keepdims=True)
+    bsq = jnp.sum(b * b, -1, keepdims=True)
+    amp = jnp.asarray(amplitude, jnp.float32).reshape(1, 1)
+
+    Q, N = a.shape[0], b.shape[0]
+    grid = (Q // TILE_Q, N // TILE_N)
+
+    out = pl.pallas_call(
+        _kvp_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_Q, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((TILE_N, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((TILE_Q, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((TILE_N, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((TILE_N, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_Q, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Q, 1), jnp.float32),
+        interpret=interpret,
+    )(a, b, asq, bsq, al, amp)
+
+    return out[:nq, 0].astype(dtype)

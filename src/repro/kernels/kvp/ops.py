@@ -1,0 +1,18 @@
+"""Public op: fused GP-mean kernel-vector product with backend dispatch."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.kvp.kernel import kvp
+from repro.kernels.kvp.ref import kvp_ref
+
+
+def gp_mean_kvp(xq: jax.Array, xt: jax.Array, alpha: jax.Array,
+                inv_lengthscale: jax.Array, amplitude: jax.Array,
+                *, backend: str = "xla", interpret: bool = False) -> jax.Array:
+    if backend == "pallas":
+        return kvp(xq, xt, alpha, inv_lengthscale, amplitude,
+                   interpret=interpret)
+    if backend == "xla":
+        return kvp_ref(xq, xt, alpha, inv_lengthscale, amplitude)
+    raise ValueError(f"unknown backend {backend!r}")

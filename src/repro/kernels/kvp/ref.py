@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the fused cross-kernel × vector product."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.matern.ref import matern52_gram_ref
+
+
+def kvp_ref(xq: jax.Array, xt: jax.Array, alpha: jax.Array,
+            inv_lengthscale: jax.Array, amplitude: jax.Array) -> jax.Array:
+    """GP posterior-mean kernel-vector product: (q,) = k(xq, xt) @ alpha."""
+    return matern52_gram_ref(xq, xt, inv_lengthscale, amplitude) @ alpha

@@ -1,0 +1,22 @@
+"""Public op: Matérn-5/2 gram with backend dispatch.
+
+``backend="pallas"`` targets TPU (or ``interpret=True`` for CPU validation);
+``backend="xla"`` is the pure-jnp path used by the CPU BO benchmarks.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.matern.kernel import matern52_gram
+from repro.kernels.matern.ref import matern52_gram_ref
+
+
+def matern52_cross(x1: jax.Array, x2: jax.Array, inv_lengthscale: jax.Array,
+                   amplitude: jax.Array, *, backend: str = "xla",
+                   interpret: bool = False) -> jax.Array:
+    if backend == "pallas":
+        return matern52_gram(x1, x2, inv_lengthscale, amplitude,
+                             interpret=interpret)
+    if backend == "xla":
+        return matern52_gram_ref(x1, x2, inv_lengthscale, amplitude)
+    raise ValueError(f"unknown backend {backend!r}")

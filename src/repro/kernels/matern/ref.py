@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the Matérn-5/2 gram kernel (no Pallas)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+SQRT5 = 2.2360679774997896
+
+
+def matern52_gram_ref(x1: jax.Array, x2: jax.Array, inv_lengthscale: jax.Array,
+                      amplitude: jax.Array) -> jax.Array:
+    """k(x1, x2): (n1, n2).  x*: (n*, D); inv_lengthscale: (D,); amplitude: ()."""
+    a = x1 * inv_lengthscale
+    b = x2 * inv_lengthscale
+    d2 = (jnp.sum(a * a, -1)[:, None] + jnp.sum(b * b, -1)[None, :]
+          - 2.0 * (a @ b.T))
+    d2 = jnp.maximum(d2, 0.0)
+    r = jnp.sqrt(d2 + 1e-36)
+    return amplitude * (1.0 + SQRT5 * r + (5.0 / 3.0) * d2) * \
+        jnp.exp(-SQRT5 * r)

@@ -1,0 +1,32 @@
+"""Production meshes.  Defined as FUNCTIONS so importing this module never
+touches jax device state (the dry-run pins the device count before any
+jax initialization)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) = ("data", "model") — 256 chips (v5e pod).
+    Multi-pod: (2, 16, 16) = ("pod", "data", "model") — 512 chips; the
+    "pod" axis extends data parallelism across the cross-pod DCN/ICI."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,)
+                         * len(axes))
+
+
+def make_smoke_mesh(shape=(2, 2), axes=("data", "model")):
+    """Tiny host-device mesh for tests (requires
+    --xla_force_host_platform_device_count >= prod(shape))."""
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,)
+                         * len(axes))
+
+
+# v5e hardware constants for the roofline (per chip)
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # B/s
+ICI_BW_PER_LINK = 50e9          # B/s/link
+HBM_BYTES = 16 * 1024**3        # 16 GiB

@@ -1,0 +1,262 @@
+"""Assigned input-shape cells + dry-run lowering targets.
+
+Each cell pairs an architecture with one of the four assigned shapes and
+produces (step_fn, arg ShapeDtypeStructs, in_shardings) for
+``jax.jit(...).lower(...)`` — weak-type-correct, shardable, zero device
+allocation.
+
+Cell eligibility (DESIGN.md §5): ``long_500k`` needs sub-quadratic decode
+(RG-LRU hybrid, xLSTM); pure full-attention archs skip it.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import (Boxed, is_boxed, param_pspecs,
+                                        pspec, unbox)
+from repro.models import lm
+from repro.models import whisper as wh
+from repro.models.config import ModelConfig
+from repro.train.optim import OptimConfig, init_opt_state, zero1_pspec
+from repro.train.step import make_train_step
+
+
+@dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1),
+}
+
+
+def cell_supported(cfg: ModelConfig, shape: ShapeCell) -> Tuple[bool, str]:
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "full attention is O(S²) — 500k decode infeasible"
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# shape-only param/state construction (jax.eval_shape: no allocation)
+# ---------------------------------------------------------------------------
+
+def init_fn_for(cfg: ModelConfig):
+    return wh.init_params if cfg.family == "encdec" else lm.init_params
+
+
+def params_shapes(cfg: ModelConfig):
+    """Boxed tree of ShapeDtypeStructs + the matching PartitionSpec tree."""
+    init = init_fn_for(cfg)
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    boxed = jax.eval_shape(lambda k: init(k, cfg), key)
+    return boxed
+
+
+def _mesh_dict(mesh: Mesh):
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _sds_tree_shardings(tree, axes_fn, mesh: Mesh):
+    """NamedShardings for a plain SDS tree via path-based logical axes."""
+    md = _mesh_dict(mesh)
+
+    def one(path, leaf):
+        axes = axes_fn(path, leaf)
+        return NamedSharding(mesh, pspec(leaf.shape, axes,
+                                         mesh.axis_names, md))
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def _cache_axes(path, leaf):
+    """Logical axes for decode-cache leaves, keyed by tree path."""
+    keys = [getattr(p, "key", getattr(p, "idx", None)) for p in path]
+    name = keys[-1] if isinstance(keys[-1], str) else None
+    nd = len(leaf.shape)
+    in_mlstm = "mlstm" in keys
+
+    if name in ("k", "v"):
+        return (None, "batch_full", "kv_seq", "kv_heads", "head")[:nd] \
+            if nd == 5 else (None,) * (nd - 4) + \
+            ("batch_full", "kv_seq", "kv_heads", "head")
+    if name == "pos":
+        return (None,) * (nd - 2) + ("batch_full", "kv_seq")
+    if name == "enc_pos":
+        return ("batch_full", None)
+    if name == "conv":
+        return (None,) * (nd - 3) + ("batch_full", None, "lru")
+    if name == "h":
+        return (None,) * (nd - 2) + ("batch_full", "lru")
+    if in_mlstm:
+        # (G, n_m, B, H, dk, dv) / (G, n_m, B, H, dk) / (G, n_m, B, H)
+        return (None, None, "batch_full") + (None,) * (nd - 4) + \
+            (("lru",) if nd >= 5 else ())
+    # slstm states (G, B, W) and anything else
+    if nd >= 2:
+        return (None,) * (nd - 2) + ("batch_full", "lru")
+    return (None,) * nd
+
+
+# ---------------------------------------------------------------------------
+# lowering targets
+# ---------------------------------------------------------------------------
+
+def default_grad_accum(shape: ShapeCell, mesh: Mesh) -> int:
+    """Baseline microbatching: one batch row per device per microbatch —
+    the memory-safe default the §Perf hillclimb starts from."""
+    md = _mesh_dict(mesh)
+    dp = 1
+    for ax in ("pod", "data"):
+        if ax in md and shape.global_batch % (dp * md[ax]) == 0:
+            dp *= md[ax]
+    return max(shape.global_batch // dp, 1)
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeCell, mesh: Mesh, *,
+               opt_cfg: Optional[OptimConfig] = None,
+               grad_accum: Optional[int] = None):
+    """→ (step_fn, args (tuple of SDS pytrees), in_shardings,
+    out_shardings, donate_argnums).
+
+    out_shardings pins state outputs to their input layouts: donation then
+    aliases params/opt/caches in place, and the optimizer's ZeRO-domain
+    update all-gathers exactly once (bf16) at the jit boundary.
+    """
+    ok, why = cell_supported(cfg, shape)
+    if not ok:
+        raise ValueError(f"{cfg.name} × {shape.name}: {why}")
+    if grad_accum is None:
+        grad_accum = default_grad_accum(shape, mesh) \
+            if shape.kind == "train" else 1
+
+    md = _mesh_dict(mesh)
+    dt = jnp.dtype(cfg.dtype)
+    # params stay Boxed end-to-end (model code reads .value); sharding
+    # trees mirror the Boxed structure so pytree flattening lines up.
+    params_sds = params_shapes(cfg)
+
+    def _spec_of(b: Boxed) -> P:
+        base = pspec(b.value.shape, b.axes, mesh.axis_names, md)
+        if cfg.fsdp:
+            # ZeRO-3/FSDP: shard params over "data" as well; GSPMD
+            # all-gathers per-layer at use and reduce-scatters grads.
+            base = zero1_pspec(base, b.value.shape, mesh.axis_names, md)
+        return base
+
+    p_shard = jax.tree.map(
+        lambda b: Boxed(NamedSharding(mesh, _spec_of(b)), b.axes),
+        params_sds, is_leaf=is_boxed)
+
+    B, S = shape.global_batch, shape.seq_len
+    tok_shard = NamedSharding(
+        mesh, pspec((B, S), ("batch", None), mesh.axis_names, md))
+
+    if shape.kind == "train":
+        opt_cfg = opt_cfg or OptimConfig()
+        opt_sds = jax.eval_shape(
+            lambda p: init_opt_state(p, opt_cfg), params_sds)
+
+        def moment_shard(b: Boxed) -> Boxed:
+            # ZeRO-1: extend the param spec with a "data" shard
+            z = zero1_pspec(_spec_of(b), b.value.shape,
+                            mesh.axis_names, md) if opt_cfg.zero1 \
+                else _spec_of(b)
+            return Boxed(NamedSharding(mesh, z), b.axes)
+
+        mu_shard = jax.tree.map(moment_shard, params_sds, is_leaf=is_boxed)
+        nu_shard = jax.tree.map(moment_shard, params_sds, is_leaf=is_boxed)
+        ef_shard = jax.tree.map(moment_shard, params_sds,
+                                is_leaf=is_boxed) \
+            if opt_cfg.grad_compression == "int8_ef" else ()
+        opt_shard = type(opt_sds)(
+            step=NamedSharding(mesh, P()), mu=mu_shard, nu=nu_shard,
+            ef=ef_shard)
+
+        batch_sds = {
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "targets": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+        batch_shard = {"tokens": tok_shard, "targets": tok_shard}
+        if cfg.family == "encdec":
+            S_enc = max(int(S * cfg.enc_seq_fraction), 8)
+            batch_sds["frames"] = jax.ShapeDtypeStruct(
+                (B, S_enc, cfg.d_model), jnp.float32)
+            batch_shard["frames"] = NamedSharding(
+                mesh, pspec((B, S_enc, cfg.d_model),
+                            ("batch", None, None), mesh.axis_names, md))
+
+        step = make_train_step(cfg, opt_cfg, grad_accum=grad_accum)
+        args = (params_sds, opt_sds, batch_sds)
+        shards = (p_shard, opt_shard, batch_shard)
+        out_shards = (p_shard, opt_shard, None)      # metrics: XLA's choice
+        return step, args, shards, out_shards, (0, 1)
+
+    if shape.kind == "prefill":
+        if cfg.family == "encdec":
+            S_enc = max(int(S * cfg.enc_seq_fraction), 8)
+            S_dec = S - S_enc
+
+            def step(params, frames, tokens):
+                enc = wh.encode(params, cfg, frames)
+                hid = wh.decode_train(params, cfg, enc, tokens)
+                from repro.models.layers import lm_logits
+                return lm_logits(params["embed"], cfg, hid[:, -1:, :])
+
+            frames_sds = jax.ShapeDtypeStruct((B, S_enc, cfg.d_model),
+                                              jnp.float32)
+            tokens_sds = jax.ShapeDtypeStruct((B, S_dec), jnp.int32)
+            f_shard = NamedSharding(mesh, pspec(
+                (B, S_enc, cfg.d_model), ("batch", None, None),
+                mesh.axis_names, md))
+            t_shard = NamedSharding(mesh, pspec(
+                (B, S_dec), ("batch", None), mesh.axis_names, md))
+            return step, (params_sds, frames_sds, tokens_sds), \
+                (p_shard, f_shard, t_shard), None, ()
+
+        def step(params, tokens):
+            hid, _ = lm.forward(params, cfg, tokens)
+            from repro.models.layers import lm_logits
+            return lm_logits(params["embed"], cfg, hid[:, -1:, :])
+
+        tokens_sds = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        return step, (params_sds, tokens_sds), (p_shard, tok_shard), \
+            None, ()
+
+    # ---- decode ------------------------------------------------------------
+    if cfg.family == "encdec":
+        S_enc = 1500      # whisper-native encoder length for decode cells
+        enc_sds = jax.ShapeDtypeStruct((B, S_enc, cfg.d_model), dt)
+        cache_sds = jax.eval_shape(
+            lambda p, e: wh.init_cache(p, cfg, e, B, S),
+            params_sds, enc_sds)
+
+        def step(params, tokens, cache, position):
+            return wh.decode_step(params, cfg, tokens, cache, position)
+    else:
+        cache_sds = jax.eval_shape(lambda: lm.init_cache(cfg, B, S))
+
+        def step(params, tokens, cache, position):
+            return lm.decode_step(params, cfg, tokens, cache, position)
+
+    cache_shard = _sds_tree_shardings(cache_sds, _cache_axes, mesh)
+    tokens_sds = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    tok1_shard = NamedSharding(mesh, pspec((B, 1), ("batch", None),
+                                           mesh.axis_names, md))
+    pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+    pos_shard = NamedSharding(mesh, P())
+    args = (params_sds, tokens_sds, cache_sds, pos_sds)
+    shards = (p_shard, tok1_shard, cache_shard, pos_shard)
+    out_shards = (None, cache_shard)    # cache out == cache in → aliases
+    return step, args, shards, out_shards, (2,)

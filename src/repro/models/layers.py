@@ -1,0 +1,338 @@
+"""Transformer building blocks: norms, RoPE, GQA attention, MLP.
+
+Pure functions over Boxed-param pytrees.  Attention has three execution
+paths sharing one interface:
+
+* ``chunked`` — pure-XLA flash-style scan over query blocks (the dry-run /
+  training path; keeps the (S, S) score matrix out of live memory),
+* ``pallas``  — `repro.kernels.flash` (TPU serving/prefill path),
+* ``decode``  — single-query attention over a KV cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.sharding import Boxed, box, constrain
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def _dense_init(key, shape, dtype, in_axis_size):
+    scale = in_axis_size ** -0.5
+    return jax.random.normal(key, shape, dtype) * jnp.asarray(scale, dtype)
+
+
+def make_dense(key, d_in, d_out, dtype, axes) -> Boxed:
+    return box(_dense_init(key, (d_in, d_out), dtype, d_in), *axes)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, dtype) -> dict:
+    p = {"scale": box(jnp.ones((cfg.d_model,), dtype), "embed")}
+    if cfg.norm == "layernorm":
+        p["bias"] = box(jnp.zeros((cfg.d_model,), dtype), "embed")
+    return p
+
+
+def apply_norm(p: dict, x: Array, kind: str, eps: float = 1e-6) -> Array:
+    """Stats in f32, products in x.dtype.
+
+    Deliberately avoids materializing an f32 copy of x: the reductions fuse
+    convert(x) away, whereas an f32 x tensor with multiple consumers gets
+    hoisted OUT of the layer loop by XLA into a (layers, B, S, D) f32 stack
+    — 2× the remat carry budget (see EXPERIMENTS.md §Perf #7).
+    """
+    cdt = jnp.promote_types(x.dtype, jnp.float32)
+    if kind == "rmsnorm":
+        ms = jnp.mean(jnp.square(x.astype(cdt)), -1, keepdims=True)
+        inv = jax.lax.rsqrt(ms + eps).astype(x.dtype)
+        out = x * inv * p["scale"].value
+    else:
+        mu = jnp.mean(x.astype(cdt), -1, keepdims=True)
+        var = jnp.var(x.astype(cdt), -1, keepdims=True)
+        inv = jax.lax.rsqrt(var + eps)
+        out = ((x - mu.astype(x.dtype)) * inv.astype(x.dtype)
+               * p["scale"].value)
+    if "bias" in p:
+        out = out + p["bias"].value
+    return out
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (full or partial / "2d" fraction)
+# ---------------------------------------------------------------------------
+
+def rope(x: Array, positions: Array, theta: float, fraction: float) -> Array:
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    rot = int(hd * fraction)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[:, :, None, None] * \
+        freqs[None, None, None, :]            # (B, S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = xr[..., :half].astype(jnp.float32), \
+        xr[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return jnp.concatenate([out.astype(x.dtype), xp], -1)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, dtype) -> dict:
+    d, nh, nkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    kq, kk, kv, ko, kn1, kn2 = jax.random.split(key, 6)
+    p = {
+        "wq": box(_dense_init(kq, (d, nh, hd), dtype, d),
+                  "embed", "heads", None),
+        "wk": box(_dense_init(kk, (d, nkv, hd), dtype, d),
+                  "embed", "kv_heads", "head"),
+        "wv": box(_dense_init(kv, (d, nkv, hd), dtype, d),
+                  "embed", "kv_heads", "head"),
+        "wo": box(_dense_init(ko, (nh, hd, d), dtype, nh * hd),
+                  "heads", None, "embed"),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = box(jnp.ones((hd,), dtype), None)
+        p["k_norm"] = box(jnp.ones((hd,), dtype), None)
+    return p
+
+
+def _qk_normalize(x: Array, scale: Array) -> Array:
+    xf = x.astype(jnp.float32)
+    xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + 1e-6)
+    return (xf * scale).astype(x.dtype)
+
+
+def _grouped_scores(q: Array, k: Array) -> Array:
+    """q: (B, Sq, KH, G, hd), k: (B, Sk, KH, hd) → (B, KH, G, Sq, Sk).
+
+    Grouped form never materializes repeated KV heads — on decode the KV
+    cache read is the roofline term, so bytes stay at kv_heads, not heads.
+    """
+    return jnp.einsum("bqkgh,bskh->bkgqs", q, k,
+                      preferred_element_type=jnp.float32)
+
+
+def _attend_block(q, k, v, mask):
+    """q: (B,Sq,KH,G,hd); k/v: (B,Sk,KH,hd); mask: (B,1,1,Sq,Sk) bool."""
+    hd = q.shape[-1]
+    s = _grouped_scores(q, k) * (hd ** -0.5)
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v)
+    return out
+
+
+def attention_xla(q: Array, k: Array, v: Array, *, causal: bool,
+                  window: int, q_pos: Array, kv_pos: Array,
+                  chunk: int = 0) -> Array:
+    """Chunked XLA attention.  q: (B, Sq, NH, hd), k/v: (B, Sk, KH, hd).
+
+    All masking is position-based: ``q_pos`` (B, Sq) and ``kv_pos`` (B, Sk)
+    hold absolute token positions; kv slots with position −1 are invalid
+    (ring-buffer / unfilled cache).  ``chunk``: query-block size; 0 or
+    >= Sq disables chunking.
+    """
+    B, Sq, NH, hd = q.shape
+    Sk, KH = k.shape[1], k.shape[2]
+    G = NH // KH
+    qg = q.reshape(B, Sq, KH, G, hd)
+
+    ik = kv_pos[:, None, None, None, :]                 # (B,1,1,1,Sk)
+    valid = ik >= 0
+
+    def mask_for(iq_abs):
+        # iq_abs: (B, c) absolute positions of this query block
+        iq = iq_abs[:, None, None, :, None]
+        m = valid
+        if causal:
+            m = m & (ik <= iq)
+        if window:
+            m = m & (ik > iq - window)
+        return m
+
+    if chunk <= 0 or chunk >= Sq or Sq % chunk != 0:
+        out = _attend_block(qg, k, v, mask_for(q_pos))
+        return out.reshape(B, Sq, NH, hd)
+    n_chunks = Sq // chunk
+    qg_c = qg.reshape(B, n_chunks, chunk, KH, G, hd).transpose(
+        1, 0, 2, 3, 4, 5)                       # (C, B, chunk, KH, G, hd)
+    qpos_c = q_pos.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+
+    def body(carry, args):
+        qc, pc = args
+        oc = _attend_block(qc, k, v, mask_for(pc))
+        return carry, oc
+
+    _, outs = lax.scan(body, None, (qg_c, qpos_c))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, KH, G, hd)
+    return out.reshape(B, Sq, NH, hd)
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnTemps:
+    """Static attention call profile (which path, masking, chunking)."""
+    causal: bool = True
+    window: int = 0
+    chunk: int = 1024
+
+
+def apply_attention(p: dict, cfg: ModelConfig, x: Array, positions: Array,
+                    *, window: int = 0,
+                    cache: Optional[dict] = None,
+                    cache_index: Optional[Array] = None,
+                    causal: bool = True) -> Tuple[Array, Optional[dict]]:
+    """Full attention sublayer.  x: (B, S, D).
+
+    Without ``cache``: training/prefill self-attention.  With ``cache``:
+    write this step's K/V at ``cache_index`` (ring-indexed when the cache is
+    window-bounded) and attend over the valid slots; the cache carries a
+    per-slot ``pos`` tensor so masking is exact across ring wraparound.
+    """
+    B, S, D = x.shape
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"].value)
+    k = jnp.einsum("bsd,dkh->bskh", x, p["wk"].value)
+    v = jnp.einsum("bsd,dkh->bskh", x, p["wv"].value)
+    if cfg.qk_norm:
+        q = _qk_normalize(q, p["q_norm"].value)
+        k = _qk_normalize(k, p["k_norm"].value)
+    q = rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
+    k = rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
+    if cache is None:
+        q = constrain(q, "batch", None, "heads", None)
+    else:
+        # decode: the KV cache may be head-dim sharded (kv_heads often
+        # indivisible by the model axis) — shard q the same way so the QK
+        # contraction partial-sums over the sharded head dim (tiny score
+        # psum) instead of all-gathering the cache (GiBs, f32).
+        q = constrain(q, "batch", None, None, "head")
+        k = constrain(k, "batch", None, "kv_heads", "head")
+        v = constrain(v, "batch", None, "kv_heads", "head")
+
+    new_cache = None
+    if cache is None:
+        out = attention_xla(q, k, v, causal=causal, window=window,
+                            q_pos=positions,
+                            kv_pos=positions, chunk=cfg.attn_chunk)
+    else:
+        ck, cv, cpos = cache["k"], cache["v"], cache["pos"]
+        length = ck.shape[1]
+        idx = jnp.asarray(cache_index)
+        if idx.ndim == 0:
+            # uniform write index (lockstep decode / prefill-fill)
+            slot = (idx % length if window else idx).astype(jnp.int32)
+            ck = lax.dynamic_update_slice_in_dim(
+                ck, k.astype(ck.dtype), slot, axis=1)
+            cv = lax.dynamic_update_slice_in_dim(
+                cv, v.astype(cv.dtype), slot, axis=1)
+            cpos = lax.dynamic_update_slice_in_dim(cpos, positions, slot,
+                                                   axis=1)
+        else:
+            # per-row write index (continuous batching); S must be 1.
+            # Convention: idx < 0 marks an inactive row — its write lands
+            # in the reserved trash slot (length-1) with pos=-1, so idle
+            # rows never corrupt live cache entries.
+            assert S == 1, "vector cache_index requires single-token steps"
+            slot = (idx % length if window else idx).astype(jnp.int32)
+            slot = jnp.where(idx >= 0, slot, length - 1)
+            bidx = jnp.arange(B)
+            ck = ck.at[bidx, slot].set(k[:, 0].astype(ck.dtype))
+            cv = cv.at[bidx, slot].set(v[:, 0].astype(cv.dtype))
+            cpos = cpos.at[bidx, slot].set(positions[:, 0])
+        out = attention_xla(q, ck, cv, causal=causal, window=window,
+                            q_pos=positions, kv_pos=cpos, chunk=0)
+        new_cache = {"k": ck, "v": cv, "pos": cpos}
+
+    y = jnp.einsum("bsnh,nhd->bsd", out, p["wo"].value)
+    return constrain(y, "batch", None, None), new_cache
+
+
+def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int, dtype,
+                    window: int = 0) -> dict:
+    """Pre-allocated KV cache.  Local-attention layers bound it by window;
+    ``pos`` holds each slot's absolute position (−1 = empty)."""
+    length = min(max_len, window) if window else max_len
+    shape = (batch, length, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "pos": jnp.full((batch, length), -1, jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, dtype, d_ff: Optional[int] = None
+             ) -> dict:
+    d = cfg.d_model
+    ff = cfg.d_ff if d_ff is None else d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_up": box(_dense_init(k1, (d, ff), dtype, d), "embed", "ff"),
+        "w_down": box(_dense_init(k2, (ff, d), dtype, ff), "ff", "embed"),
+    }
+    if cfg.activation in ("swiglu", "geglu"):
+        p["w_gate"] = box(_dense_init(k3, (d, ff), dtype, d), "embed", "ff")
+    return p
+
+
+def apply_mlp(p: dict, cfg: ModelConfig, x: Array) -> Array:
+    h = jnp.einsum("bsd,df->bsf", x, p["w_up"].value)
+    if cfg.activation in ("swiglu", "geglu"):
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].value)
+        act = jax.nn.silu if cfg.activation == "swiglu" else jax.nn.gelu
+        h = act(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = constrain(h, "batch", None, "ff")
+    out = jnp.einsum("bsf,fd->bsd", h, p["w_down"].value)
+    return constrain(out, "batch", None, None)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / head
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, cfg: ModelConfig, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {"tok": box(jax.random.normal(k1, (cfg.vocab_size, cfg.d_model),
+                                      dtype) * 0.02, "vocab", "embed")}
+    if not cfg.tie_embeddings:
+        p["head"] = box(
+            _dense_init(k2, (cfg.d_model, cfg.vocab_size), dtype,
+                        cfg.d_model), "embed", "vocab")
+    return p
+
+
+def embed_tokens(p: dict, tokens: Array) -> Array:
+    out = jnp.take(p["tok"].value, tokens, axis=0)
+    return constrain(out, "batch", None, None)
+
+
+def lm_logits(p: dict, cfg: ModelConfig, x: Array) -> Array:
+    w = p["tok"].value.T if cfg.tie_embeddings else p["head"].value
+    logits = jnp.einsum("bsd,dv->bsv", x, w)
+    return constrain(logits, "batch", None, "vocab")

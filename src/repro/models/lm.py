@@ -1,0 +1,400 @@
+"""LM assembly: init/forward/prefill/decode for all decoder-only families
+(dense, moe, vlm-backbone, hybrid RG-LRU, ssm xLSTM).  Encoder-decoder lives
+in `models/whisper.py`.
+
+Layer stacking uses `lax.scan` over homogeneous runs (compile-time is the
+scarce resource on the 1-core dry-run host): dense/moe scan all layers;
+RecurrentGemma scans (rec, rec, attn) triples + a recurrent tail; xLSTM
+scans groups of (7 mLSTM + 1 sLSTM).  Remat policy wraps the scanned body.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.sharding import Boxed, box, constrain, is_boxed
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import rglru as RG
+from repro.models import xlstm as XL
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _stack_init(init_fn, key, n: int):
+    """vmap an init over n layers; prepend a (layers) axis to Boxed axes."""
+    keys = jax.random.split(key, n)
+    stacked = jax.vmap(init_fn)(keys)
+    return jax.tree.map(lambda b: Boxed(b.value, (None,) + b.axes),
+                        stacked, is_leaf=is_boxed)
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# per-family single-block init/apply
+# ---------------------------------------------------------------------------
+
+def _init_dense_block(cfg: ModelConfig, dtype):
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        p = {
+            "attn_norm": L.init_norm(cfg, dtype),
+            "attn": L.init_attention(k1, cfg, dtype),
+            "mlp_norm": L.init_norm(cfg, dtype),
+        }
+        if cfg.is_moe:
+            p["moe"] = MOE.init_moe(k2, cfg, dtype)
+        else:
+            p["mlp"] = L.init_mlp(k2, cfg, dtype)
+        return p
+    return init
+
+
+def _apply_dense_block(p, cfg: ModelConfig, x, positions, cache=None,
+                       cache_index=None):
+    h = L.apply_norm(p["attn_norm"], x, cfg.norm)
+    a, new_cache = L.apply_attention(
+        p["attn"], cfg, h, positions, window=0,
+        cache=cache, cache_index=cache_index)
+    x = x + a
+    h = L.apply_norm(p["mlp_norm"], x, cfg.norm)
+    if cfg.is_moe:
+        m, aux = MOE.apply_moe(p["moe"], cfg, h)
+    else:
+        m, aux = L.apply_mlp(p["mlp"], cfg, h), jnp.zeros((), jnp.float32)
+    return x + m, new_cache, aux
+
+
+def _init_rg_block(cfg: ModelConfig, dtype, kind: str):
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        p = {
+            "mix_norm": L.init_norm(cfg, dtype),
+            "mlp_norm": L.init_norm(cfg, dtype),
+            "mlp": L.init_mlp(k2, cfg, dtype),
+        }
+        if kind == "attn":
+            p["attn"] = L.init_attention(k1, cfg, dtype)
+        else:
+            p["rec"] = RG.init_recurrent_block(k1, cfg, dtype)
+        return p
+    return init
+
+
+def _apply_rg_block(p, cfg: ModelConfig, x, positions, kind: str,
+                    state=None, cache_index=None):
+    h = L.apply_norm(p["mix_norm"], x, cfg.norm)
+    if kind == "attn":
+        a, new_state = L.apply_attention(
+            p["attn"], cfg, h, positions, window=cfg.window,
+            cache=state, cache_index=cache_index)
+    else:
+        a, new_state = RG.apply_recurrent_block(p["rec"], cfg, h, state)
+    x = x + a
+    h = L.apply_norm(p["mlp_norm"], x, cfg.norm)
+    return x + L.apply_mlp(p["mlp"], cfg, h), new_state
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    dtype = _dtype(cfg)
+    k_emb, k_blocks, k_tail = jax.random.split(key, 3)
+    params: Dict[str, Any] = {
+        "embed": L.init_embedding(k_emb, cfg, dtype),
+        "final_norm": L.init_norm(cfg, dtype),
+    }
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        params["blocks"] = _stack_init(_init_dense_block(cfg, dtype),
+                                       k_blocks, cfg.n_layers)
+    elif cfg.family == "hybrid":
+        n_attn = cfg.n_layers // cfg.attn_every
+        n_triples = n_attn
+        n_tail = cfg.n_layers - n_triples * cfg.attn_every
+
+        def init_triple(k):
+            k1, k2, k3 = jax.random.split(k, 3)
+            return {
+                "rec1": _init_rg_block(cfg, dtype, "rec")(k1),
+                "rec2": _init_rg_block(cfg, dtype, "rec")(k2),
+                "attn": _init_rg_block(cfg, dtype, "attn")(k3),
+            }
+        params["triples"] = _stack_init(init_triple, k_blocks, n_triples)
+        if n_tail:
+            params["tail"] = _stack_init(
+                _init_rg_block(cfg, dtype, "rec"), k_tail, n_tail)
+    elif cfg.family == "ssm":
+        n_groups = cfg.n_layers // cfg.slstm_every
+        n_m = cfg.slstm_every - 1
+
+        def init_group(k):
+            k1, k2 = jax.random.split(k)
+            return {
+                "mlstm": _stack_init(
+                    lambda kk: XL.init_mlstm_block(kk, cfg, dtype), k1, n_m),
+                "slstm": XL.init_slstm_block(k2, cfg, dtype),
+            }
+        params["groups"] = _stack_init(init_group, k_blocks, n_groups)
+    else:
+        raise ValueError(f"init_params: family {cfg.family} not handled here")
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (training / no-cache)
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg: ModelConfig, tokens: Array,
+            embeddings: Optional[Array] = None) -> Tuple[Array, Array]:
+    """→ (final hidden (B,S,D), moe aux loss).  ``embeddings`` overrides
+    token lookup for stub frontends."""
+    if embeddings is None:
+        x = L.embed_tokens(params["embed"], tokens)
+    else:
+        x = embeddings
+    if cfg.seq_shard:
+        x = constrain(x, "batch", "seq_sp", None)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(carry, p_layer):
+            h, aux = carry
+            h2, _, a = _apply_dense_block(p_layer, cfg, h, positions)
+            if cfg.seq_shard:
+                # Megatron-SP: the residual stream (and therefore the
+                # remat-saved scan carry) lives sequence-sharded over the
+                # model axis; GSPMD splits each TP all-reduce into the
+                # all-gather/reduce-scatter pair around it.
+                h2 = constrain(h2, "batch", "seq_sp", None)
+            return (h2, aux + a), None
+        (x, aux), _ = lax.scan(_remat(body, cfg), (x, jnp.zeros((), jnp.float32)),
+                               params["blocks"])
+    elif cfg.family == "hybrid":
+        def body(carry, p_tri):
+            h = carry
+            h, _ = _apply_rg_block(p_tri["rec1"], cfg, h, positions, "rec")
+            h, _ = _apply_rg_block(p_tri["rec2"], cfg, h, positions, "rec")
+            h, _ = _apply_rg_block(p_tri["attn"], cfg, h, positions, "attn")
+            return h, None
+        x, _ = lax.scan(_remat(body, cfg), x, params["triples"])
+        if "tail" in params:
+            def tail_body(carry, p_layer):
+                h, _ = _apply_rg_block(p_layer, cfg, carry, positions, "rec")
+                return h, None
+            x, _ = lax.scan(_remat(tail_body, cfg), x, params["tail"])
+        aux = jnp.zeros((), jnp.float32)
+    elif cfg.family == "ssm":
+        def group_body(carry, p_group):
+            h = carry
+
+            def m_body(c, p_layer):
+                y, _ = XL.apply_mlstm_block(p_layer, cfg, c)
+                return c + y, None
+            h, _ = lax.scan(m_body, h, p_group["mlstm"])
+            y, _ = XL.apply_slstm_block(p_group["slstm"], cfg, h)
+            return h + y, None
+        x, _ = lax.scan(_remat(group_body, cfg), x, params["groups"])
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    if cfg.family in ("dense", "moe", "vlm") and not cfg.is_moe:
+        aux = jnp.zeros((), jnp.float32)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+def cross_entropy(params, cfg: ModelConfig, hidden: Array,
+                  targets: Array) -> Array:
+    """Vocab-sharded softmax CE.  The (B,S,V) logits stay sharded
+    (batch→data, vocab→model); reductions over V partition into per-shard
+    reductions + scalar collectives — the full-logits all-gather never
+    happens (DESIGN.md §6)."""
+    logits = L.lm_logits(params["embed"], cfg, hidden).astype(jnp.float32)
+    logits = constrain(logits, "batch", None, "vocab")
+    lmax = jax.lax.stop_gradient(jnp.max(logits, -1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(logits - lmax), -1)) + lmax[..., 0]
+    onehot = jax.nn.one_hot(targets, cfg.vocab_size, dtype=jnp.float32)
+    onehot = constrain(onehot, "batch", None, "vocab")
+    true_logit = jnp.sum(logits * onehot, axis=-1)
+    return jnp.mean(lse - true_logit)
+
+
+def lm_loss(params, cfg: ModelConfig, batch: Dict[str, Array]) -> Array:
+    hidden, aux = forward(params, cfg, batch["tokens"],
+                          embeddings=batch.get("embeddings"))
+    loss = cross_entropy(params, cfg, hidden, batch["targets"])
+    return loss + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode with per-layer caches
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Stacked per-layer decode state matching the scan layouts."""
+    dtype = _dtype(cfg)
+
+    def rep(tree, n):
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), tree)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        one = L.init_attn_cache(cfg, batch, max_len, dtype)
+        return rep(one, cfg.n_layers)
+    if cfg.family == "hybrid":
+        n_triples = cfg.n_layers // cfg.attn_every
+        n_tail = cfg.n_layers - n_triples * cfg.attn_every
+        tri = {
+            "rec1": RG.init_recurrent_state(cfg, batch, dtype),
+            "rec2": RG.init_recurrent_state(cfg, batch, dtype),
+            "attn": L.init_attn_cache(cfg, batch, max_len, dtype,
+                                      window=cfg.window),
+        }
+        out = {"triples": rep(tri, n_triples)}
+        if n_tail:
+            out["tail"] = rep(RG.init_recurrent_state(cfg, batch, dtype),
+                              n_tail)
+        return out
+    if cfg.family == "ssm":
+        n_groups = cfg.n_layers // cfg.slstm_every
+        n_m = cfg.slstm_every - 1
+        grp = {
+            "mlstm": rep(XL.init_mlstm_state(cfg, batch, dtype), n_m),
+            "slstm": XL.init_slstm_state(cfg, batch),
+        }
+        return {"groups": rep(grp, n_groups)}
+    raise ValueError(cfg.family)
+
+
+def reset_slot(cfg: ModelConfig, cache, slot: int):
+    """Zero one batch slot of a decode cache (continuous-batching admission).
+
+    Attention caches get their per-slot positions invalidated (−1) so stale
+    entries from the previous occupant can never pass the position mask;
+    recurrent/ssm states zero out.  Batch axis: 2 for the doubly-stacked
+    mLSTM leaves, 1 for everything else (layer-stacked).
+    """
+    def fix(path, leaf):
+        axis = 2 if any(getattr(p, "key", None) == "mlstm" for p in path) \
+            else 1
+        idx = (slice(None),) * axis + (slot,)
+        is_pos = getattr(path[-1], "key", None) == "pos"
+        val = -jnp.ones_like(leaf[idx]) if is_pos \
+            else jnp.zeros_like(leaf[idx])
+        return leaf.at[idx].set(val)
+
+    return jax.tree_util.tree_map_with_path(fix, cache)
+
+
+def decode_step(params, cfg: ModelConfig, tokens: Array, cache,
+                position) -> Tuple[Array, Any]:
+    """One serving step.  tokens: (B, 1) int32; position: () or (B,) int32
+    index of this token in each sequence (vector form = continuous
+    batching).  Returns (logits (B, V), new cache)."""
+    x = L.embed_tokens(params["embed"], tokens)
+    B = x.shape[0]
+    pos_arr = jnp.asarray(position, jnp.int32)
+    if pos_arr.ndim == 0:
+        positions = jnp.broadcast_to(pos_arr[None, None], (B, 1))
+    else:
+        positions = pos_arr[:, None]
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        # The stacked KV cache rides in the scan CARRY and is updated with
+        # dynamic_update_index — XLA aliases the while-loop carry in place,
+        # so exactly ONE cache copy is live (scan xs/ys would double-buffer
+        # the multi-GiB cache; see EXPERIMENTS.md §Perf decode iteration).
+        def body(carry, inp):
+            h, ck, cv, cpos = carry
+            p_layer, li = inp
+            c_layer = {
+                "k": lax.dynamic_index_in_dim(ck, li, 0, keepdims=False),
+                "v": lax.dynamic_index_in_dim(cv, li, 0, keepdims=False),
+                "pos": lax.dynamic_index_in_dim(cpos, li, 0,
+                                                keepdims=False),
+            }
+            h2, nc, _ = _apply_dense_block(p_layer, cfg, h, positions,
+                                           cache=c_layer,
+                                           cache_index=position)
+            ck = lax.dynamic_update_index_in_dim(ck, nc["k"], li, 0)
+            cv = lax.dynamic_update_index_in_dim(cv, nc["v"], li, 0)
+            cpos = lax.dynamic_update_index_in_dim(cpos, nc["pos"], li, 0)
+            return (h2, ck, cv, cpos), None
+
+        n_layers = cache["pos"].shape[0]
+        (x, ck, cv, cpos), _ = lax.scan(
+            body, (x, cache["k"], cache["v"], cache["pos"]),
+            (params["blocks"], jnp.arange(n_layers)))
+        new_cache = {"k": ck, "v": cv, "pos": cpos}
+    elif cfg.family == "hybrid":
+        def body(h, inp):
+            p_tri, c_tri = inp
+            h, s1 = _apply_rg_block(p_tri["rec1"], cfg, h, positions, "rec",
+                                    state=c_tri["rec1"])
+            h, s2 = _apply_rg_block(p_tri["rec2"], cfg, h, positions, "rec",
+                                    state=c_tri["rec2"])
+            h, ca = _apply_rg_block(p_tri["attn"], cfg, h, positions, "attn",
+                                    state=c_tri["attn"],
+                                    cache_index=position)
+            return h, {"rec1": s1, "rec2": s2, "attn": ca}
+        x, new_tri = lax.scan(body, x, (params["triples"],
+                                        cache["triples"]))
+        new_cache = {"triples": new_tri}
+        if "tail" in params:
+            def tail_body(h, inp):
+                p_layer, c_layer = inp
+                h, s = _apply_rg_block(p_layer, cfg, h, positions, "rec",
+                                       state=c_layer)
+                return h, s
+            x, new_tail = lax.scan(tail_body, x, (params["tail"],
+                                                  cache["tail"]))
+            new_cache["tail"] = new_tail
+    elif cfg.family == "ssm":
+        def group_body(h, inp):
+            p_group, c_group = inp
+
+            def m_body(c, minp):
+                p_layer, s_layer = minp
+                y, ns = XL.apply_mlstm_block(p_layer, cfg, c, state=s_layer,
+                                             decode=True)
+                return c + y, ns
+            h, new_m = lax.scan(m_body, h, (p_group["mlstm"],
+                                            c_group["mlstm"]))
+            y, new_s = XL.apply_slstm_block(p_group["slstm"], cfg, h,
+                                            state=c_group["slstm"])
+            return h + y, {"mlstm": new_m, "slstm": new_s}
+        x, new_groups = lax.scan(group_body, x, (params["groups"],
+                                                 cache["groups"]))
+        new_cache = {"groups": new_groups}
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = L.lm_logits(params["embed"], cfg, x)[:, 0, :]
+    return logits, new_cache

@@ -1,0 +1,120 @@
+"""Griffin/RecurrentGemma recurrent block: causal conv + RG-LRU.
+
+RG-LRU is a *diagonal* gated linear recurrence:
+    a_t = exp(-c · softplus(Λ) · σ(r_t))
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+Diagonality makes it associative ⇒ training runs as one
+``lax.associative_scan`` over the sequence (parallel depth log S — the
+TPU-native answer to the paper-family's CUDA linear-scan kernels), while
+decode keeps an O(1) carried state.  This is what makes the long_500k cell
+feasible for this family (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.sharding import box, constrain
+from repro.models.config import ModelConfig
+from repro.models.layers import _dense_init
+
+Array = jax.Array
+
+_C = 8.0      # Griffin's fixed recurrence sharpness constant
+
+
+def init_recurrent_block(key, cfg: ModelConfig, dtype) -> dict:
+    d, w = cfg.d_model, cfg.lru_width
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    p = {
+        # two input branches (gate / recurrent)
+        "w_gate_in": box(_dense_init(k1, (d, w), dtype, d), "embed", "lru"),
+        "w_rec_in": box(_dense_init(k2, (d, w), dtype, d), "embed", "lru"),
+        "w_out": box(_dense_init(k3, (w, d), dtype, w), "lru", "embed"),
+        # temporal conv (depthwise, width cfg.conv_width)
+        "conv_w": box(_dense_init(k4, (cfg.conv_width, w), dtype,
+                                  cfg.conv_width), None, "lru"),
+        "conv_b": box(jnp.zeros((w,), dtype), "lru"),
+        # RG-LRU gates
+        "w_input_gate": box(_dense_init(k5, (w, w), dtype, w), "lru", None),
+        "w_rec_gate": box(_dense_init(k6, (w, w), dtype, w), "lru", None),
+        "lambda_param": box(jnp.full((w,), 0.7, jnp.float32), "lru"),
+    }
+    return p
+
+
+def _causal_conv(x: Array, w: Array, b: Array,
+                 state: Optional[Array] = None
+                 ) -> Tuple[Array, Array]:
+    """Depthwise causal conv.  x: (B, S, W); w: (K, W).
+
+    ``state``: (B, K-1, W) trailing context from the previous segment
+    (decode); returns (out, new_state).
+    """
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)          # (B, S+K-1, W)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(K))
+    new_state = xp[:, -(K - 1):, :] if K > 1 else state
+    return out + b, new_state
+
+
+def _rg_lru(x: Array, r: Array, i: Array, lam: Array,
+            h0: Optional[Array] = None) -> Tuple[Array, Array]:
+    """x/r/i: (B, S, W) → (h, h_last).  Associative scan over S."""
+    cdt = jnp.promote_types(x.dtype, jnp.float32)
+    log_a = -_C * jax.nn.softplus(lam.astype(cdt))[None, None, :] * \
+        jax.nn.sigmoid(r.astype(cdt))                  # (B, S, W) ≤ 0
+    a = jnp.exp(log_a)
+    gated = jax.nn.sigmoid(i.astype(cdt)) * x.astype(cdt)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+
+    if h0 is not None:
+        # fold the carried state into the first step
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0.astype(cdt))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_sc, h = lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1, :]
+
+
+def apply_recurrent_block(p: dict, cfg: ModelConfig, x: Array,
+                          state: Optional[dict] = None
+                          ) -> Tuple[Array, Optional[dict]]:
+    """x: (B, S, D) → (y, new_state).  state carries (conv, h) for decode."""
+    gate = jax.nn.gelu(
+        jnp.einsum("bsd,dw->bsw", x, p["w_gate_in"].value))
+    rec = jnp.einsum("bsd,dw->bsw", x, p["w_rec_in"].value)
+    rec = constrain(rec, "batch", None, "lru")
+
+    conv_state = state["conv"] if state is not None else None
+    rec, new_conv = _causal_conv(rec, p["conv_w"].value,
+                                 p["conv_b"].value, conv_state)
+
+    r = jnp.einsum("bsw,wu->bsu", rec, p["w_rec_gate"].value)
+    i = jnp.einsum("bsw,wu->bsu", rec, p["w_input_gate"].value)
+    h0 = state["h"] if state is not None else None
+    h, h_last = _rg_lru(rec, r, i, p["lambda_param"].value, h0)
+
+    y = jnp.einsum("bsw,wd->bsd", h * gate, p["w_out"].value)
+    y = constrain(y, "batch", None, None)
+    new_state = None
+    if state is not None:
+        new_state = {"conv": new_conv, "h": h_last}
+    return y, new_state
+
+
+def init_recurrent_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.lru_width), dtype),
+        "h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+    }

@@ -1,0 +1,218 @@
+"""Whisper-style encoder-decoder backbone (audio frontend stubbed).
+
+Per the assignment note, ``[audio]`` entries specify the transformer
+BACKBONE only: ``input_specs()`` feeds precomputed frame embeddings
+(B, S_enc, d_model) — the conv frontend is a stub.  Positions are
+sinusoidal (computed on the fly).  The decoder carries a self-attention KV
+cache plus encoder cross-attention K/V computed once at prefill.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.sharding import Boxed, box, constrain, is_boxed
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+def _sinusoidal(positions: Array, d: int, dtype) -> Array:
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32)
+                    * (jnp.log(10000.0) / max(half - 1, 1)))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)],
+                           axis=-1).astype(dtype)
+
+
+def _stack_init(init_fn, key, n):
+    keys = jax.random.split(key, n)
+    stacked = jax.vmap(init_fn)(keys)
+    return jax.tree.map(lambda b: Boxed(b.value, (None,) + b.axes),
+                        stacked, is_leaf=is_boxed)
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    dtype = jnp.dtype(cfg.dtype)
+    k_emb, k_enc, k_dec = jax.random.split(key, 3)
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "attn_norm": L.init_norm(cfg, dtype),
+            "attn": L.init_attention(k1, cfg, dtype),
+            "mlp_norm": L.init_norm(cfg, dtype),
+            "mlp": L.init_mlp(k2, cfg, dtype),
+        }
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "self_norm": L.init_norm(cfg, dtype),
+            "self_attn": L.init_attention(k1, cfg, dtype),
+            "cross_norm": L.init_norm(cfg, dtype),
+            "cross_attn": L.init_attention(k2, cfg, dtype),
+            "mlp_norm": L.init_norm(cfg, dtype),
+            "mlp": L.init_mlp(k3, cfg, dtype),
+        }
+
+    return {
+        "embed": L.init_embedding(k_emb, cfg, dtype),
+        "enc": _stack_init(enc_layer, k_enc, cfg.n_enc_layers),
+        "dec": _stack_init(dec_layer, k_dec, cfg.n_dec_layers),
+        "enc_norm": L.init_norm(cfg, dtype),
+        "final_norm": L.init_norm(cfg, dtype),
+    }
+
+
+def _cross_attend(p, cfg, x, enc_k, enc_v, enc_pos):
+    """Decoder→encoder attention with precomputed encoder K/V."""
+    B, S, D = x.shape
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"].value)
+    q = constrain(q, "batch", None, "heads", None)
+    q_pos = jnp.zeros((B, S), jnp.int32)  # non-causal: positions unused
+    out = L.attention_xla(q, enc_k, enc_v, causal=False, window=0,
+                          q_pos=q_pos, kv_pos=enc_pos,
+                          chunk=cfg.attn_chunk)
+    y = jnp.einsum("bsnh,nhd->bsd", out, p["wo"].value)
+    return constrain(y, "batch", None, None)
+
+
+def _enc_kv(p, enc_out):
+    k = jnp.einsum("bsd,dkh->bskh", enc_out, p["wk"].value)
+    v = jnp.einsum("bsd,dkh->bskh", enc_out, p["wv"].value)
+    return k, v
+
+
+def encode(params, cfg: ModelConfig, frames: Array) -> Array:
+    """frames: (B, S_enc, D) stub embeddings → encoder hidden states."""
+    B, S, D = frames.shape
+    dt = jnp.dtype(cfg.dtype)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = frames.astype(dt) + _sinusoidal(pos, D, dt)
+    x = constrain(x, "batch", None, None)
+
+    def body(h, p_layer):
+        a = L.apply_norm(p_layer["attn_norm"], h, cfg.norm)
+        a, _ = L.apply_attention(p_layer["attn"], cfg, a, pos, causal=False)
+        h = h + a
+        m = L.apply_norm(p_layer["mlp_norm"], h, cfg.norm)
+        return h + L.apply_mlp(p_layer["mlp"], cfg, m), None
+
+    x, _ = lax.scan(jax.checkpoint(body) if cfg.remat != "none" else body,
+                    x, params["enc"])
+    return L.apply_norm(params["enc_norm"], x, cfg.norm)
+
+
+def decode_train(params, cfg: ModelConfig, enc_out: Array,
+                 tokens: Array) -> Array:
+    """Teacher-forced decoder pass → final hidden (B, S_dec, D)."""
+    B, S = tokens.shape
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = L.embed_tokens(params["embed"], tokens)
+    x = x + _sinusoidal(pos, cfg.d_model, x.dtype)
+    enc_pos = jnp.broadcast_to(
+        jnp.arange(enc_out.shape[1], dtype=jnp.int32)[None],
+        (B, enc_out.shape[1]))
+
+    def body(h, p_layer):
+        a = L.apply_norm(p_layer["self_norm"], h, cfg.norm)
+        a, _ = L.apply_attention(p_layer["self_attn"], cfg, a, pos,
+                                 causal=True)
+        h = h + a
+        c = L.apply_norm(p_layer["cross_norm"], h, cfg.norm)
+        ek, ev = _enc_kv(p_layer["cross_attn"], enc_out)
+        h = h + _cross_attend(p_layer["cross_attn"], cfg, c, ek, ev, enc_pos)
+        m = L.apply_norm(p_layer["mlp_norm"], h, cfg.norm)
+        return h + L.apply_mlp(p_layer["mlp"], cfg, m), None
+
+    x, _ = lax.scan(jax.checkpoint(body) if cfg.remat != "none" else body,
+                    x, params["dec"])
+    return L.apply_norm(params["final_norm"], x, cfg.norm)
+
+
+def lm_loss(params, cfg: ModelConfig, batch: Dict[str, Array]) -> Array:
+    from repro.models.lm import cross_entropy
+    enc_out = encode(params, cfg, batch["frames"])
+    hidden = decode_train(params, cfg, enc_out, batch["tokens"])
+    return cross_entropy(params, cfg, hidden, batch["targets"])
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_cache(params, cfg: ModelConfig, enc_out: Array, batch: int,
+               max_len: int) -> Dict[str, Any]:
+    """Decoder cache: per-layer self-attn KV + precomputed cross K/V."""
+    dtype = jnp.dtype(cfg.dtype)
+
+    def rep(tree, n):
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), tree)
+
+    self_cache = rep(L.init_attn_cache(cfg, batch, max_len, dtype),
+                     cfg.n_dec_layers)
+    cross = _cross_all(params, cfg, enc_out)
+    enc_pos = jnp.broadcast_to(
+        jnp.arange(enc_out.shape[1], dtype=jnp.int32)[None],
+        (batch, enc_out.shape[1]))
+    return {"self": self_cache, "cross": cross, "enc_pos": enc_pos}
+
+
+def _cross_all(params, cfg, enc_out):
+    def body(_, p_layer):
+        k, v = _enc_kv(p_layer["cross_attn"], enc_out)
+        return None, {"k": k, "v": v}
+    _, cross = lax.scan(body, None, params["dec"])
+    return cross
+
+
+def decode_step(params, cfg: ModelConfig, tokens: Array, cache,
+                position) -> Tuple[Array, Any]:
+    """One decoder step.  tokens: (B, 1) → (logits (B, V), new cache)."""
+    B = tokens.shape[0]
+    pos = jnp.broadcast_to(
+        jnp.asarray(position, jnp.int32)[None, None], (B, 1))
+    x = L.embed_tokens(params["embed"], tokens)
+    x = x + _sinusoidal(pos, cfg.d_model, x.dtype)
+
+    def body(carry, inp):
+        h, ck, cv, cpos = carry
+        p_layer, cross_c, li = inp
+        self_c = {
+            "k": lax.dynamic_index_in_dim(ck, li, 0, keepdims=False),
+            "v": lax.dynamic_index_in_dim(cv, li, 0, keepdims=False),
+            "pos": lax.dynamic_index_in_dim(cpos, li, 0, keepdims=False),
+        }
+        a = L.apply_norm(p_layer["self_norm"], h, cfg.norm)
+        a, nc = L.apply_attention(p_layer["self_attn"], cfg, a, pos,
+                                  causal=True, cache=self_c,
+                                  cache_index=position)
+        h = h + a
+        c = L.apply_norm(p_layer["cross_norm"], h, cfg.norm)
+        h = h + _cross_attend(p_layer["cross_attn"], cfg, c,
+                              cross_c["k"], cross_c["v"],
+                              cache["enc_pos"])
+        m = L.apply_norm(p_layer["mlp_norm"], h, cfg.norm)
+        h = h + L.apply_mlp(p_layer["mlp"], cfg, m)
+        ck = lax.dynamic_update_index_in_dim(ck, nc["k"], li, 0)
+        cv = lax.dynamic_update_index_in_dim(cv, nc["v"], li, 0)
+        cpos = lax.dynamic_update_index_in_dim(cpos, nc["pos"], li, 0)
+        return (h, ck, cv, cpos), None
+
+    sc = cache["self"]
+    n_layers = sc["pos"].shape[0]
+    (x, ck, cv, cpos), _ = lax.scan(
+        body, (x, sc["k"], sc["v"], sc["pos"]),
+        (params["dec"], cache["cross"], jnp.arange(n_layers)))
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = L.lm_logits(params["embed"], cfg, x)[:, 0, :]
+    new_cache = {"self": {"k": ck, "v": cv, "pos": cpos},
+                 "cross": cache["cross"], "enc_pos": cache["enc_pos"]}
+    return logits, new_cache

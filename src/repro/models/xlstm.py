@@ -1,0 +1,300 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, sequential scan).
+
+mLSTM per head (d_k keys, d_v values), exponential gating with stabilizer:
+    m_t = max(f̃_t + m_{t-1}, ĩ_t)
+    f'_t = exp(f̃_t + m_{t-1} - m_t),  i'_t = exp(ĩ_t - m_t)
+    C_t = f'_t C_{t-1} + i'_t v_t k_tᵀ        n_t = f'_t n_{t-1} + i'_t k_t
+    h_t = (C_t q_t) / max(|n_tᵀ q_t|, 1)
+
+Training uses the *chunkwise-parallel* form (lax.scan over chunks, O(L²+L·d²)
+per chunk on the MXU); decode uses the O(1) recurrent step.  Sub-quadratic in
+S ⇒ this family runs the long_500k cell (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.sharding import box, constrain
+from repro.models.config import ModelConfig
+from repro.models.layers import _dense_init, apply_norm
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# mLSTM cell — chunkwise parallel + recurrent step
+# ---------------------------------------------------------------------------
+
+def mlstm_chunkwise(q, k, v, logf, logi, chunk: int,
+                    state: Optional[tuple] = None):
+    """q/k: (B, H, S, dk); v: (B, H, S, dv); logf/logi: (B, H, S).
+
+    Returns (h: (B, H, S, dv), final_state=(C, n, m)).
+    """
+    B, H, S, dk = q.shape
+    dv = v.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    def resh(x, d=None):
+        if d is None:
+            return x.reshape(B, H, nc, chunk).transpose(2, 0, 1, 3)
+        return x.reshape(B, H, nc, chunk, d).transpose(2, 0, 1, 3, 4)
+
+    qs, ks, vs = resh(q, dk), resh(k, dk), resh(v, dv)
+    lfs, lis = resh(logf), resh(logi)
+
+    if state is None:
+        cdt = jnp.promote_types(q.dtype, jnp.float32)
+        C0 = jnp.zeros((B, H, dk, dv), cdt)
+        n0 = jnp.zeros((B, H, dk), cdt)
+        m0 = jnp.full((B, H), -1e30, cdt)
+    else:
+        C0, n0, m0 = state
+
+    scale = dk ** -0.5
+
+    def body(carry, xs):
+        C, n, m = carry
+        qc, kc, vc, lf, li = xs          # (B,H,L,*)
+        L = qc.shape[2]
+        bcum = jnp.cumsum(lf, axis=2)                       # (B,H,L)
+        # intra-chunk log-decay D[t,s] = bcum_t - bcum_s + li_s (s ≤ t)
+        ldec = bcum[..., :, None] - bcum[..., None, :] + li[..., None, :]
+        tri = jnp.tril(jnp.ones((L, L), bool))
+        ldec = jnp.where(tri, ldec, -jnp.inf)
+        # stabilizers
+        m_intra = jnp.max(ldec, axis=-1)                    # (B,H,L)
+        m_inter = bcum + m[..., None]                       # (B,H,L)
+        m_t = jnp.maximum(m_intra, m_inter)
+        m_t = jnp.maximum(m_t, -1e30)
+
+        dec = jnp.exp(ldec - m_t[..., None])                # (B,H,L,L)
+        inter_w = jnp.exp(m_inter - m_t)                    # (B,H,L)
+
+        pet = jnp.promote_types(qc.dtype, jnp.float32)
+        s_qk = jnp.einsum("bhld,bhmd->bhlm", qc, kc,
+                          preferred_element_type=pet) * scale
+        h_num = jnp.einsum("bhlm,bhmv->bhlv", s_qk * dec, vc) \
+            + inter_w[..., None] * jnp.einsum(
+                "bhld,bhdv->bhlv", qc, C) * scale
+        # normalizer state at t: decayed k-sum (no q): intra + carried n
+        n_t = jnp.einsum("bhlm,bhmd->bhld", dec, kc) \
+            + inter_w[..., None] * jnp.broadcast_to(
+                n[:, :, None, :], (B, H, L, dk))
+        qn = jnp.einsum("bhld,bhld->bhl", qc, n_t) * scale
+        denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_t))
+        h = h_num / denom[..., None]
+
+        # chunk-final state
+        lf_total = bcum[..., -1]                            # (B,H)
+        m_new = jnp.maximum(lf_total + m, jnp.max(
+            lf_total[..., None] - bcum + li, axis=-1))
+        w_old = jnp.exp(lf_total + m - m_new)               # (B,H)
+        w_s = jnp.exp(lf_total[..., None] - bcum + li - m_new[..., None])
+        C_new = w_old[..., None, None] * C + jnp.einsum(
+            "bhl,bhld,bhlv->bhdv", w_s, kc, vc)
+        n_new = w_old[..., None] * n + jnp.einsum(
+            "bhl,bhld->bhd", w_s, kc)
+        return (C_new, n_new, m_new), h
+
+    (Cf, nf, mf), hs = lax.scan(
+        body, (C0, n0, m0), (qs, ks, vs, lfs, lis))
+    h = hs.transpose(1, 2, 0, 3, 4).reshape(B, H, S, dv)
+    return h, (Cf, nf, mf)
+
+
+def mlstm_step(q, k, v, logf, logi, state):
+    """Single decode step.  q/k: (B,H,dk); v: (B,H,dv); logf/logi: (B,H)."""
+    C, n, m = state
+    dk = q.shape[-1]
+    scale = dk ** -0.5
+    m_new = jnp.maximum(logf + m, logi)
+    fp = jnp.exp(logf + m - m_new)
+    ip = jnp.exp(logi - m_new)
+    C_new = fp[..., None, None] * C + ip[..., None, None] * \
+        jnp.einsum("bhd,bhv->bhdv", k, v)
+    n_new = fp[..., None] * n + ip[..., None] * k
+    num = jnp.einsum("bhd,bhdv->bhv", q, C_new) * scale
+    qn = jnp.einsum("bhd,bhd->bh", q, n_new) * scale
+    denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_new))
+    return num / denom[..., None], (C_new, n_new, m_new)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM cell — strictly sequential scalar memory
+# ---------------------------------------------------------------------------
+
+def slstm_scan(z, i_in, f_in, o_in, r_z, r_i, r_f, r_o,
+               state: Optional[tuple] = None):
+    """Inputs: (B, S, W) pre-activations; r_*: (H, W/H, W/H) block-diagonal
+    recurrent weights.  Returns (h: (B, S, W), final state)."""
+    B, S, W = z.shape
+    H = r_z.shape[0]
+    wh = W // H
+
+    if state is None:
+        cdt = jnp.promote_types(z.dtype, jnp.float32)
+        c0 = jnp.zeros((B, W), cdt)
+        n0 = jnp.ones((B, W), cdt)
+        h0 = jnp.zeros((B, W), cdt)
+        m0 = jnp.zeros((B, W), cdt)
+    else:
+        c0, n0, h0, m0 = state
+
+    def rmat(h, r):
+        hb = h.reshape(B, H, wh)
+        return jnp.einsum("bhw,hwu->bhu", hb, r).reshape(B, W)
+
+    def step(carry, xs):
+        c, n, h, m = carry
+        zt, it, ft, ot = xs              # (B, W)
+        zt = jnp.tanh(zt + rmat(h, r_z))
+        it = it + rmat(h, r_i)
+        ft = ft + rmat(h, r_f)
+        ot = jax.nn.sigmoid(ot + rmat(h, r_o))
+        m_new = jnp.maximum(ft + m, it)
+        ip = jnp.exp(it - m_new)
+        fp = jnp.exp(ft + m - m_new)
+        c_new = fp * c + ip * zt
+        n_new = fp * n + ip
+        h_new = ot * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    cdt2 = jnp.promote_types(z.dtype, jnp.float32)
+    xs = tuple(a.astype(cdt2).transpose(1, 0, 2)
+               for a in (z, i_in, f_in, o_in))
+    (cf, nf, hf, mf), hs = lax.scan(step, (c0, n0, h0, m0), xs)
+    return hs.transpose(1, 0, 2).astype(z.dtype), (cf, nf, hf, mf)
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def init_mlstm_block(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    up = 2 * d
+    H = cfg.n_heads
+    dk = up // H // 2
+    dv = up // H
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": box(_dense_init(ks[0], (d, up), dtype, d), "embed", "lru"),
+        "w_gate": box(_dense_init(ks[1], (d, up), dtype, d), "embed", "lru"),
+        "conv_w": box(_dense_init(ks[2], (cfg.conv_width, up), dtype,
+                                  cfg.conv_width), None, "lru"),
+        "conv_b": box(jnp.zeros((up,), dtype), "lru"),
+        "w_q": box(_dense_init(ks[3], (up, H, dk), dtype, up),
+                   "lru", "heads", None),
+        "w_k": box(_dense_init(ks[4], (up, H, dk), dtype, up),
+                   "lru", "heads", None),
+        "w_if": box(_dense_init(ks[5], (up, H, 2), jnp.float32, up),
+                    "lru", "heads", None),
+        "w_down": box(_dense_init(ks[6], (up, d), dtype, up),
+                      "lru", "embed"),
+        "skip_scale": box(jnp.ones((up,), dtype), "lru"),
+    }
+
+
+def apply_mlstm_block(p: dict, cfg: ModelConfig, x: Array,
+                      state=None, *, decode: bool = False):
+    """x: (B, S, D).  state: (conv_state, (C, n, m)) when decoding."""
+    from repro.models.rglru import _causal_conv
+
+    B, S, D = x.shape
+    H = cfg.n_heads
+    up = p["w_up"].value.shape[1]
+    dv = up // H
+
+    xu = jnp.einsum("bsd,du->bsu", x, p["w_up"].value)
+    z = jnp.einsum("bsd,du->bsu", x, p["w_gate"].value)
+    xu = constrain(xu, "batch", None, "lru")
+
+    conv_state = state[0] if state is not None else None
+    xc, new_conv = _causal_conv(xu, p["conv_w"].value, p["conv_b"].value,
+                                conv_state)
+    xc = jax.nn.silu(xc)
+
+    q = jnp.einsum("bsu,uhk->bhsk", xc, p["w_q"].value)
+    k = jnp.einsum("bsu,uhk->bhsk", xc, p["w_k"].value)
+    v = xu.reshape(B, S, H, dv).transpose(0, 2, 1, 3)
+    gates = jnp.einsum("bsu,uhg->bhsg", xc.astype(jnp.float32),
+                       p["w_if"].value)
+    logi = gates[..., 0]
+    logf = jax.nn.log_sigmoid(gates[..., 1])
+
+    cell_state = state[1] if state is not None else None
+    if decode:
+        assert S == 1
+        h, new_cell = mlstm_step(q[:, :, 0].astype(jnp.float32),
+                                 k[:, :, 0].astype(jnp.float32),
+                                 v[:, :, 0].astype(jnp.float32),
+                                 logf[:, :, 0], logi[:, :, 0], cell_state)
+        h = h[:, :, None, :]
+    else:
+        chunk = min(cfg.mlstm_chunk, S)
+        h, new_cell = mlstm_chunkwise(q.astype(jnp.float32),
+                                      k.astype(jnp.float32),
+                                      v.astype(jnp.float32),
+                                      logf, logi, chunk, cell_state)
+
+    h = h.astype(xu.dtype).transpose(0, 2, 1, 3).reshape(B, S, up)
+    h = h + xc * p["skip_scale"].value
+    out = h * jax.nn.silu(z)
+    y = jnp.einsum("bsu,ud->bsd", out, p["w_down"].value)
+    y = constrain(y, "batch", None, None)
+    new_state = (new_conv, new_cell) if state is not None else None
+    return y, new_state
+
+
+def init_slstm_block(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    H = cfg.n_heads
+    wh = d // H
+    ks = jax.random.split(key, 10)
+    p = {"w_in": box(_dense_init(ks[0], (d, 4 * d), dtype, d),
+                     "embed", "lru")}
+    for i, name in enumerate(("r_z", "r_i", "r_f", "r_o")):
+        p[name] = box(_dense_init(ks[1 + i], (H, wh, wh), jnp.float32, wh),
+                      "heads", None, None)
+    # post-cell GN-ish scale + FFN-lite projection
+    p["w_out"] = box(_dense_init(ks[5], (d, d), dtype, d), "embed", None)
+    return p
+
+
+def apply_slstm_block(p: dict, cfg: ModelConfig, x: Array, state=None):
+    B, S, D = x.shape
+    pre = jnp.einsum("bsd,dz->bsz", x, p["w_in"].value)
+    z, i_in, f_in, o_in = jnp.split(pre, 4, axis=-1)
+    h, new_state = slstm_scan(z, i_in, f_in, o_in,
+                              p["r_z"].value, p["r_i"].value,
+                              p["r_f"].value, p["r_o"].value, state)
+    y = jnp.einsum("bsd,de->bse", h.astype(x.dtype), p["w_out"].value)
+    y = constrain(y, "batch", None, None)
+    return y, (new_state if state is not None else None)
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int, dtype):
+    up = 2 * cfg.d_model
+    H = cfg.n_heads
+    dk = up // H // 2
+    dv = up // H
+    conv = jnp.zeros((batch, cfg.conv_width - 1, up), dtype)
+    cell = (jnp.zeros((batch, H, dk, dv), jnp.float32),
+            jnp.zeros((batch, H, dk), jnp.float32),
+            jnp.full((batch, H), -1e30, jnp.float32))
+    return (conv, cell)
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    return (jnp.zeros((batch, d), jnp.float32),
+            jnp.ones((batch, d), jnp.float32),
+            jnp.zeros((batch, d), jnp.float32),
+            jnp.zeros((batch, d), jnp.float32))

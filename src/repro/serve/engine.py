@@ -1,0 +1,135 @@
+"""Batched serving engine: prefill + greedy decode with continuous batching.
+
+Slot-based continuous batching: a fixed batch of decode slots; when a
+sequence finishes (EOS or max length) its slot is refilled from the pending
+queue at the next step boundary.  Every step is ONE jitted program over the
+full slot batch with *per-slot positions* — idle slots carry position −1 and
+their cache writes land in a reserved trash slot (see layers.apply_attention),
+so heterogeneous slot progress never corrupts live entries.  On the
+production mesh the same decode fn lowers with the cache sharded per
+DESIGN.md §6.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray               # (prompt_len,) int32
+    max_new_tokens: int = 32
+    out_tokens: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: ModelConfig, *, slots: int = 8,
+                 max_len: int = 512, eos_id: int = -1):
+        if cfg.family == "encdec":
+            raise NotImplementedError(
+                "engine serves decoder-only archs; whisper uses "
+                "whisper.decode_step directly")
+        self.params = params
+        self.cfg = cfg
+        self.slots = slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.cache = lm.init_cache(cfg, slots, max_len)
+        self.positions = np.zeros((slots,), np.int64)
+        self.active: List[Optional[Request]] = [None] * slots
+        self.queue: List[Request] = []
+        self._step_fn = jax.jit(
+            lambda p, t, c, i: lm.decode_step(p, cfg, t, c, i))
+        self.stats: Dict[str, Any] = {"steps": 0, "tokens": 0, "wall": 0.0}
+
+    # ---------------------------------------------------------------- api
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _batched_step(self, toks: np.ndarray, pos: np.ndarray):
+        """One jitted step; pos < 0 marks idle rows (trash-slot writes)."""
+        t0 = time.perf_counter()
+        logits, self.cache = self._step_fn(
+            self.params, jnp.asarray(toks), self.cache,
+            jnp.asarray(pos, jnp.int32))
+        self.stats["wall"] += time.perf_counter() - t0
+        self.stats["steps"] += 1
+        return np.asarray(logits)
+
+    def _fill_slots(self):
+        """Admit queued requests; prefill all newly admitted slots together
+        step-by-step (idle/established slots ride along masked)."""
+        newly = []
+        for s in range(self.slots):
+            if self.active[s] is None and self.queue:
+                req = self.queue.pop(0)
+                self.active[s] = req
+                self.positions[s] = 0
+                self.cache = lm.reset_slot(self.cfg, self.cache, s)
+                newly.append(s)
+        if not newly:
+            return
+        max_pref = max(len(self.active[s].prompt) - 1 for s in newly)
+        for i in range(max_pref):
+            toks = np.zeros((self.slots, 1), np.int32)
+            pos = np.full((self.slots,), -1, np.int64)
+            for s in newly:
+                prompt = self.active[s].prompt
+                if i < len(prompt) - 1:
+                    toks[s, 0] = int(prompt[i])
+                    pos[s] = i
+                    self.positions[s] = i + 1
+            self._batched_step(toks, pos)
+
+    def step(self) -> int:
+        """One synchronized decode step over all slots; returns #tokens."""
+        self._fill_slots()
+        act = [s for s in range(self.slots) if self.active[s] is not None]
+        if not act:
+            return 0
+        toks = np.zeros((self.slots, 1), np.int32)
+        pos = np.full((self.slots,), -1, np.int64)
+        for s in act:
+            req = self.active[s]
+            toks[s, 0] = req.out_tokens[-1] if req.out_tokens else \
+                int(req.prompt[-1])
+            pos[s] = self.positions[s]
+        logits = self._batched_step(toks, pos)
+        nxt = np.argmax(logits, -1)
+        emitted = 0
+        for s in act:
+            req = self.active[s]
+            req.out_tokens.append(int(nxt[s]))
+            self.positions[s] += 1
+            emitted += 1
+            if (len(req.out_tokens) >= req.max_new_tokens
+                    or int(nxt[s]) == self.eos_id
+                    or self.positions[s] >= self.max_len - 1):
+                req.done = True
+                self.active[s] = None
+        self.stats["tokens"] += emitted
+        return emitted
+
+    def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
+        finished: List[Request] = []
+        for _ in range(max_steps):
+            if not self.queue and all(a is None for a in self.active):
+                break
+            before = list(self.active)
+            self.step()
+            for a in before:
+                if a is not None and a.done:
+                    finished.append(a)
+        return finished

@@ -1,0 +1,101 @@
+"""The jitted train step: loss → grads (microbatched) → AdamW update.
+
+Grad accumulation runs as a `lax.scan` over microbatches — per-microbatch
+psum stays independently schedulable, which is what lets XLA's
+latency-hiding scheduler overlap the DP all-reduce of microbatch i with the
+compute of microbatch i+1 (DESIGN.md §6 "overlap").
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import lm
+from repro.models import whisper as wh
+from repro.models.config import ModelConfig
+from repro.train.optim import (AdamState, OptimConfig, apply_updates,
+                               constrain_grads_zero1)
+
+Array = jax.Array
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict[str, Array]) -> Array:
+    if cfg.family == "encdec":
+        return wh.lm_loss(params, cfg, batch)
+    return lm.lm_loss(params, cfg, batch)
+
+
+def _cast_grads(grads, mode: str):
+    if mode == "bf16":
+        # backward collectives carry bf16 (half the DP all-reduce bytes);
+        # accumulation below stays fp32.
+        return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+    return grads
+
+
+def compute_grads(params, cfg: ModelConfig, batch, *,
+                  grad_accum: int = 1, compression: str = "none",
+                  shard_grads: bool = True):
+    """(loss, grads) with optional microbatch accumulation.
+
+    ``shard_grads``: constrain gradients to ZeRO-sharded specs (DP
+    reduce-scatter instead of all-reduce; fp32 accumulator sharded)."""
+    vg = jax.value_and_grad(loss_fn)
+    maybe_shard = constrain_grads_zero1 if shard_grads else (lambda g: g)
+
+    if grad_accum <= 1:
+        loss, grads = vg(params, cfg, batch)
+        grads = _cast_grads(grads, compression)
+        return loss, maybe_shard(
+            jax.tree.map(lambda g: g.astype(jnp.float32), grads))
+
+    def split(x):
+        return x.reshape((grad_accum, x.shape[0] // grad_accum)
+                         + x.shape[1:])
+
+    micro = jax.tree.map(split, batch)
+    # bf16 compression = genuine bf16 accumulation: the per-microbatch
+    # reduce-scatter AND the accumulator both carry bf16 (half the wire
+    # bytes + half the accumulator memory).  A post-hoc bf16 round trip
+    # would just be convert-folded away by XLA.
+    acc_dt = jnp.bfloat16 if compression == "bf16" else jnp.float32
+    zero = maybe_shard(
+        jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params))
+
+    def body(carry, mb):
+        acc, lsum = carry
+        loss, grads = vg(params, cfg, mb)
+        grads = _cast_grads(grads, compression)
+        grads = maybe_shard(grads)
+        acc = jax.tree.map(lambda a, g: a + g.astype(acc_dt) /
+                           grad_accum, acc, grads)
+        return (acc, lsum + loss / grad_accum), None
+
+    (grads, loss), _ = lax.scan(body, (zero, jnp.zeros((), jnp.float32)),
+                                micro)
+    return loss, jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+
+def train_step(params, opt_state: AdamState, batch, *, cfg: ModelConfig,
+               opt_cfg: OptimConfig, grad_accum: int = 1
+               ) -> Tuple[Any, AdamState, Dict[str, Array]]:
+    loss, grads = compute_grads(params, cfg, batch, grad_accum=grad_accum,
+                                compression=opt_cfg.grad_compression,
+                                shard_grads=opt_cfg.shard_grads)
+    new_params, new_state, metrics = apply_updates(params, grads,
+                                                   opt_state, opt_cfg)
+    metrics = dict(metrics, loss=loss)
+    return new_params, new_state, metrics
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptimConfig,
+                    grad_accum: int = 1):
+    """Returns fn(params, opt_state, batch) suitable for jit with donation."""
+    def step(params, opt_state, batch):
+        return train_step(params, opt_state, batch, cfg=cfg,
+                          opt_cfg=opt_cfg, grad_accum=grad_accum)
+    return step

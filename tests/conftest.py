@@ -1,0 +1,7 @@
+import jax
+
+# BO-side numerics (GP Cholesky, L-BFGS-B trajectories) need f64; model
+# tests pass explicit dtypes throughout so this is safe globally.
+# NOTE: the 512-device dry-run flag is deliberately NOT set here — tests
+# that need a mesh spawn subprocesses (tests/test_distributed.py).
+jax.config.update("jax_enable_x64", True)

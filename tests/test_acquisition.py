@@ -1,0 +1,67 @@
+"""LogEI stability tests (Ament et al. 2023 numerics) + properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from scipy.stats import norm
+
+from repro.core.acquisition import ei, log_ei, log_h
+
+
+def h_ref(z):
+    """φ(z) + zΦ(z) with scipy (float64 reference)."""
+    return norm.pdf(z) + z * norm.cdf(z)
+
+
+def test_log_h_matches_reference_moderate():
+    z = jnp.linspace(-8, 6, 200, dtype=jnp.float64)
+    ours = np.asarray(log_h(z))
+    ref = np.log(h_ref(np.asarray(z)))
+    np.testing.assert_allclose(ours, ref, rtol=1e-6)
+
+
+def test_log_h_extreme_negative_finite():
+    """Direct evaluation underflows long before z=-30; log_h must not."""
+    z = jnp.asarray([-10.0, -20.0, -50.0, -100.0, -1000.0], jnp.float64)
+    out = np.asarray(log_h(z))
+    assert np.all(np.isfinite(out))
+    # asymptotic: log h(z) ≈ -z²/2 - log√(2π) - 2 log|z|
+    approx = -z**2 / 2 - 0.5 * np.log(2 * np.pi) - 2 * np.log(-z)
+    np.testing.assert_allclose(out, np.asarray(approx), rtol=1e-3)
+
+
+def test_log_h_gradient_finite_everywhere():
+    g = jax.vmap(jax.grad(log_h))(jnp.asarray(
+        [-100.0, -6.0, -5.9999, -1.0, 0.0, 3.0], jnp.float64))
+    assert np.all(np.isfinite(np.asarray(g)))
+
+
+def test_logei_consistent_with_ei():
+    mean = jnp.asarray([0.0, 0.5, -0.5, 2.0], jnp.float64)
+    var = jnp.asarray([1.0, 0.25, 4.0, 0.01], jnp.float64)
+    best = jnp.asarray(0.3, jnp.float64)
+    np.testing.assert_allclose(
+        np.asarray(jnp.exp(log_ei(mean, var, best))),
+        np.asarray(ei(mean, var, best)), rtol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(mu=st.floats(-5, 5), best=st.floats(-5, 5),
+       var=st.floats(1e-4, 10.0))
+def test_property_logei_monotone_in_mean(mu, best, var):
+    """LogEI increases with the posterior mean (all else equal)."""
+    lo = log_ei(jnp.asarray(mu, jnp.float64), jnp.asarray(var, jnp.float64),
+                jnp.asarray(best, jnp.float64))
+    hi = log_ei(jnp.asarray(mu + 0.1, jnp.float64),
+                jnp.asarray(var, jnp.float64),
+                jnp.asarray(best, jnp.float64))
+    assert float(hi) >= float(lo)
+
+
+@settings(max_examples=30, deadline=None)
+@given(mu=st.floats(-50, 50), best=st.floats(-50, 50),
+       var=st.floats(1e-6, 100.0))
+def test_property_logei_finite(mu, best, var):
+    v = log_ei(jnp.asarray(mu, jnp.float64), jnp.asarray(var, jnp.float64),
+               jnp.asarray(best, jnp.float64))
+    assert np.isfinite(float(v))

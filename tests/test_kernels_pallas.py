@@ -1,0 +1,86 @@
+"""Per-kernel Pallas tests: interpret=True vs ref.py oracle over
+shape/dtype sweeps (the contract required for every kernel)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash.kernel import flash_attention
+from repro.kernels.flash.ref import attention_ref
+from repro.kernels.kvp.kernel import kvp
+from repro.kernels.kvp.ref import kvp_ref
+from repro.kernels.matern.kernel import matern52_gram
+from repro.kernels.matern.ref import matern52_gram_ref
+
+SHAPES_MATERN = [(7, 13, 5), (128, 128, 8), (130, 250, 40), (1, 257, 3)]
+DTYPES = [jnp.float32]
+
+
+@pytest.mark.parametrize("n1,n2,d", SHAPES_MATERN)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_matern_gram(n1, n2, d, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(n1 * 7 + d), 3)
+    x1 = jax.random.normal(k1, (n1, d), dtype)
+    x2 = jax.random.normal(k2, (n2, d), dtype)
+    ils = jnp.exp(jax.random.normal(k3, (d,), dtype) * 0.3)
+    amp = jnp.asarray(1.7, dtype)
+    out = matern52_gram(x1, x2, ils, amp, interpret=True)
+    ref = matern52_gram_ref(x1, x2, ils, amp)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("q,n,d", [(10, 50, 5), (128, 256, 16),
+                                   (77, 500, 40), (1, 130, 8)])
+def test_kvp(q, n, d):
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(q + n), 4)
+    xq = jax.random.normal(k1, (q, d), jnp.float32)
+    xt = jax.random.normal(k2, (n, d), jnp.float32)
+    al = jax.random.normal(k3, (n,), jnp.float32)
+    ils = jnp.exp(jax.random.normal(k4, (d,), jnp.float32) * 0.3)
+    amp = jnp.asarray(2.1, jnp.float32)
+    out = kvp(xq, xt, al, ils, amp, interpret=True)
+    ref = kvp_ref(xq, xt, al, ils, amp)
+    scale = float(jnp.max(jnp.abs(ref))) + 1e-9
+    np.testing.assert_allclose(np.asarray(out) / scale,
+                               np.asarray(ref) / scale, atol=1e-5)
+
+
+FLASH_CASES = [
+    (256, 256, 64, True, None, jnp.float32),
+    (256, 256, 64, False, None, jnp.float32),
+    (128, 384, 64, True, None, jnp.float32),    # suffix-aligned (cache)
+    (300, 300, 32, True, 128, jnp.float32),     # local window, ragged
+    (1, 513, 64, True, None, jnp.float32),      # single-query decode
+    (128, 128, 64, True, None, jnp.bfloat16),   # dtype sweep
+]
+
+
+@pytest.mark.parametrize("sq,sk,h,causal,window,dtype", FLASH_CASES)
+def test_flash_attention(sq, sk, h, causal, window, dtype):
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(sq + sk), 3)
+    q = jax.random.normal(kq, (sq, h), dtype)
+    k = jax.random.normal(kk, (sk, h), dtype)
+    v = jax.random.normal(kv, (sk, h), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          interpret=True)
+    ref = attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                        v.astype(jnp.float32), causal=causal,
+                        window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref), atol=tol, rtol=tol)
+
+
+def test_flash_blocks_shape_sweep():
+    """Block-size robustness: output must not depend on tiling."""
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(kq, (192, 32), jnp.float32)
+    k = jax.random.normal(kk, (192, 32), jnp.float32)
+    v = jax.random.normal(kv, (192, 32), jnp.float32)
+    outs = [flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk,
+                            interpret=True)
+            for bq, bk in [(64, 64), (128, 64), (64, 128)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(o), np.asarray(outs[0]),
+                                   atol=2e-5)

@@ -1,0 +1,150 @@
+"""Unit + property tests for the batched bound-constrained L-BFGS-B."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from scipy.optimize import minimize
+
+from repro.core.lbfgsb import (CONV_PGTOL, LbfgsbOptions, bfgs_minimize,
+                               inv_hessian_dense, lbfgsb_minimize,
+                               make_batched_value_and_grad)
+
+
+def rosen(x):
+    return jnp.sum(100.0 * (x[1:] - x[:-1] ** 2) ** 2
+                   + (1.0 - x[:-1]) ** 2)
+
+
+def quad(x):
+    return jnp.sum((x - 0.3) ** 2 * jnp.arange(1, x.shape[0] + 1))
+
+
+FB_ROSEN = make_batched_value_and_grad(rosen)
+FB_QUAD = make_batched_value_and_grad(quad)
+
+
+def test_matches_scipy_on_rosenbrock():
+    B, D = 6, 5
+    x0 = jax.random.uniform(jax.random.PRNGKey(0), (B, D),
+                            minval=0.0, maxval=3.0, dtype=jnp.float64)
+    opts = LbfgsbOptions(m=10, maxiter=500, pgtol=1e-8, ftol=0.0)
+    res = lbfgsb_minimize(FB_ROSEN, x0, 0.0, 3.0, opts)
+    for b in range(B):
+        r = minimize(lambda z: float(rosen(jnp.asarray(z))),
+                     np.asarray(x0[b]),
+                     jac=lambda z: np.asarray(jax.grad(rosen)(
+                         jnp.asarray(z))),
+                     method="L-BFGS-B", bounds=[(0.0, 3.0)] * D,
+                     options=dict(maxiter=500, gtol=1e-8, maxcor=10))
+        assert float(res.f[b]) < max(r.fun * 10, 1e-12), \
+            (b, float(res.f[b]), r.fun)
+
+
+def test_active_bounds_match_scipy():
+    """Constrained minimizer on [1.5, 3]^D pins coordinates at bounds."""
+    D = 5
+    x0 = jnp.full((1, D), 2.5, jnp.float64)
+    opts = LbfgsbOptions(maxiter=500, pgtol=1e-10, ftol=0.0)
+    res = lbfgsb_minimize(FB_ROSEN, x0, 1.5, 3.0, opts)
+    r = minimize(lambda z: float(rosen(jnp.asarray(z))), np.asarray(x0[0]),
+                 jac=lambda z: np.asarray(jax.grad(rosen)(jnp.asarray(z))),
+                 method="L-BFGS-B", bounds=[(1.5, 3.0)] * D,
+                 options=dict(maxiter=500, gtol=1e-10))
+    np.testing.assert_allclose(np.asarray(res.x[0]), r.x, atol=1e-5)
+
+
+def test_batch_rows_independent():
+    """Row b of a batched solve == solving row b alone (decoupling!)."""
+    B, D = 5, 4
+    x0 = jax.random.uniform(jax.random.PRNGKey(1), (B, D),
+                            minval=0.0, maxval=3.0, dtype=jnp.float64)
+    opts = LbfgsbOptions(maxiter=200, pgtol=1e-9, ftol=0.0)
+    res_all = lbfgsb_minimize(FB_ROSEN, x0, 0.0, 3.0, opts)
+    for b in range(B):
+        res_one = lbfgsb_minimize(FB_ROSEN, x0[b:b + 1], 0.0, 3.0, opts)
+        np.testing.assert_allclose(np.asarray(res_all.x[b]),
+                                   np.asarray(res_one.x[0]), atol=1e-10)
+        assert int(res_all.k[b]) == int(res_one.k[0])
+
+
+def test_quadratic_exact_and_fast():
+    B, D = 3, 8
+    x0 = jnp.zeros((B, D), jnp.float64) + jnp.arange(B)[:, None]
+    res = lbfgsb_minimize(FB_QUAD, x0, -10.0, 10.0,
+                          LbfgsbOptions(maxiter=100, pgtol=1e-10, ftol=0.0))
+    np.testing.assert_allclose(np.asarray(res.x),
+                               np.full((B, D), 0.3), atol=1e-6)
+    assert np.all(np.asarray(res.k) < 30)
+
+
+def test_already_converged_at_start():
+    x0 = jnp.full((2, 3), 0.3, jnp.float64)
+    res = lbfgsb_minimize(FB_QUAD, x0, -1.0, 1.0,
+                          LbfgsbOptions(pgtol=1e-6))
+    assert np.all(np.asarray(res.status) == CONV_PGTOL)
+    assert np.all(np.asarray(res.k) == 0)
+
+
+def test_maxiter_respected():
+    x0 = jnp.full((2, 5), 2.0, jnp.float64)
+    res = lbfgsb_minimize(FB_ROSEN, x0, 0.0, 3.0,
+                          LbfgsbOptions(maxiter=3, pgtol=1e-14, ftol=0.0))
+    assert np.all(np.asarray(res.k) <= 3)
+
+
+def test_inv_hessian_block_structure():
+    """The materialized per-restart inverse Hessian approximates the true
+    one — and is per-restart (i.e. block) by construction."""
+    B, D = 2, 3
+    # both restarts start far from the optimum so the solver builds a
+    # meaningful curvature history before converging
+    x0 = jnp.asarray([[2.0, 1.0, 0.5], [-2.0, 1.5, -1.0]], jnp.float64)
+    res = lbfgsb_minimize(FB_QUAD, x0, -10.0, 10.0,
+                          LbfgsbOptions(maxiter=50, pgtol=1e-10, ftol=0.0))
+    H = np.asarray(inv_hessian_dense(res.state, 10))
+    true_h = np.diag(1.0 / (2.0 * np.arange(1, D + 1)))
+    for b in range(B):
+        rel = np.linalg.norm(H[b] - true_h) / np.linalg.norm(true_h)
+        # inexact (Armijo) line search ⇒ looser curvature capture than
+        # exact-line-search BFGS theory; structure is what matters here
+        assert rel < 0.35, (b, rel)
+
+
+def test_bfgs_dense():
+    B, D = 4, 4
+    x0 = jax.random.uniform(jax.random.PRNGKey(2), (B, D),
+                            minval=0.5, maxval=1.5, dtype=jnp.float64)
+    res = bfgs_minimize(FB_ROSEN, x0, maxiter=300, gtol=1e-9)
+    assert np.all(np.asarray(res.f) < 1e-10)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       d=st.integers(2, 6))
+def test_property_feasible_and_descending(seed, d):
+    """Iterates stay inside the box and f never increases (Armijo)."""
+    key = jax.random.PRNGKey(seed)
+    x0 = jax.random.uniform(key, (3, d), minval=-2.0, maxval=2.0,
+                            dtype=jnp.float64)
+    res = lbfgsb_minimize(FB_QUAD, x0, -2.0, 2.0,
+                          LbfgsbOptions(maxiter=50, pgtol=1e-8))
+    x = np.asarray(res.x)
+    assert np.all(x >= -2.0 - 1e-12) and np.all(x <= 2.0 + 1e-12)
+    f0 = np.asarray(jax.vmap(quad)(x0))
+    assert np.all(np.asarray(res.f) <= f0 + 1e-12)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_property_solution_at_kkt(seed):
+    """Projected gradient vanishes at the returned solution."""
+    key = jax.random.PRNGKey(seed)
+    x0 = jax.random.uniform(key, (2, 4), minval=0.0, maxval=1.0,
+                            dtype=jnp.float64)
+    res = lbfgsb_minimize(FB_QUAD, x0, 0.0, 0.2,
+                          LbfgsbOptions(maxiter=100, pgtol=1e-9, ftol=0.0))
+    from repro.core.lbfgsb import projected_grad
+    g = jax.vmap(jax.grad(quad))(res.x)
+    pg = projected_grad(res.x, g, jnp.asarray(0.0), jnp.asarray(0.2))
+    assert float(jnp.max(jnp.abs(pg))) < 1e-6

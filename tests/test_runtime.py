@@ -1,0 +1,177 @@
+"""Training/serving runtime tests: optimizer, compression, checkpoints,
+continuous-batching engine, BO sampler journal."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.ckpt.manager import CheckpointManager
+from repro.data.synth import DataConfig, synth_batch
+from repro.models import lm
+from repro.serve.engine import Request, ServeEngine
+from repro.train.optim import OptimConfig, init_opt_state
+from repro.train.step import make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("llama3_2_3b").reduced().replace(dtype="float32",
+                                                      attn_chunk=16)
+    params = lm.init_params(KEY, cfg)
+    return cfg, params
+
+
+def _fixed_batch(cfg, B=8, S=32):
+    d = DataConfig(global_batch=B, seq_len=S, seed=0)
+    return {k: jnp.asarray(v) for k, v in synth_batch(cfg, d, 0).items()}
+
+
+def test_adamw_overfits_fixed_batch(tiny):
+    cfg, params = tiny
+    opt_cfg = OptimConfig(lr=2e-3, warmup_steps=2, total_steps=100)
+    opt_state = init_opt_state(params, opt_cfg)
+    step = jax.jit(make_train_step(cfg, opt_cfg, grad_accum=2))
+    batch = _fixed_batch(cfg)
+    first = last = None
+    for i in range(25):
+        params, opt_state, m = step(params, opt_state, batch)
+        if i == 0:
+            first = float(m["loss"])
+        last = float(m["loss"])
+    assert last < first - 1.0, (first, last)
+
+
+def test_int8_ef_compression_converges(tiny):
+    cfg, params = tiny
+    opt_cfg = OptimConfig(lr=2e-3, grad_compression="int8_ef")
+    opt_state = init_opt_state(params, opt_cfg)
+    step = jax.jit(make_train_step(cfg, opt_cfg))
+    batch = _fixed_batch(cfg)
+    first = last = None
+    for i in range(25):
+        params, opt_state, m = step(params, opt_state, batch)
+        if i == 0:
+            first = float(m["loss"])
+        last = float(m["loss"])
+    assert last < first - 1.0, (first, last)
+
+
+def test_grad_accum_equivalence(tiny):
+    """grad_accum=k equals one big batch (mean-of-means, same data)."""
+    cfg, params = tiny
+    from repro.train.step import compute_grads
+    batch = _fixed_batch(cfg, B=8)
+    l1, g1 = jax.jit(lambda p, b: compute_grads(p, cfg, b))(params, batch)
+    l2, g2 = jax.jit(lambda p, b: compute_grads(p, cfg, b,
+                                                grad_accum=4))(params,
+                                                               batch)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-4, rtol=2e-3)
+
+
+def test_checkpoint_roundtrip_and_gc(tiny):
+    cfg, params = tiny
+    opt_cfg = OptimConfig()
+    opt_state = init_opt_state(params, opt_cfg)
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2)
+        state = {"params": params, "opt": opt_state, "step": jnp.asarray(3)}
+        for s in (3, 4, 5):
+            mgr.save(s, state, block=True)
+        assert mgr.all_steps() == [4, 5]
+        restored = mgr.restore(5, state)
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_atomicity(tiny):
+    """A tmp file from a dead writer never shadows a real checkpoint."""
+    cfg, params = tiny
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        open(os.path.join(d, ".tmp_9_12345"), "w").write("garbage")
+        assert mgr.latest_step() is None
+        mgr.save(1, {"x": jnp.ones(3)}, block=True)
+        assert mgr.latest_step() == 1
+
+
+def test_engine_continuous_batching(tiny):
+    cfg, params = tiny
+    eng = ServeEngine(params, cfg, slots=3, max_len=64)
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i, prompt=rng.integers(
+        0, cfg.vocab_size, 4 + (i % 3)).astype(np.int32),
+        max_new_tokens=5) for i in range(7)]
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run_until_drained()
+    assert len(done) == 7
+    assert all(len(r.out_tokens) == 5 for r in done)
+
+
+def test_engine_slot_isolation(tiny):
+    """A request's outputs must not depend on what previously occupied its
+    slot (cache reset on admission)."""
+    cfg, params = tiny
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
+
+    eng1 = ServeEngine(params, cfg, slots=1, max_len=64)
+    eng1.submit(Request(uid=0, prompt=prompt, max_new_tokens=4))
+    ref = eng1.run_until_drained()[0].out_tokens
+
+    eng2 = ServeEngine(params, cfg, slots=1, max_len=64)
+    eng2.submit(Request(uid=0, prompt=rng.integers(
+        0, cfg.vocab_size, 9).astype(np.int32), max_new_tokens=4))
+    eng2.submit(Request(uid=1, prompt=prompt, max_new_tokens=4))
+    out = eng2.run_until_drained()
+    second = [r for r in out if r.uid == 1][0].out_tokens
+    assert second == ref, (second, ref)
+
+
+def test_sampler_journal_resume():
+    from repro.bo.sampler import GPSampler
+    from repro.bo.space import BoxSpace
+    space = BoxSpace.cube(3, -1.0, 1.0)
+    s = GPSampler(space, strategy="dbe_vec", seed=0, n_startup_trials=4)
+
+    def obj(x):
+        return float(np.sum(x ** 2))
+
+    for _ in range(5):
+        t = s.ask()
+        s.tell(t.trial_id, obj(t.x))
+    pending = s.ask()                       # crash before tell
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "journal.json")
+        s.save(path)
+        s2 = GPSampler.load(path)
+        assert len(s2.trials) == 6
+        assert s2.trials[pending.trial_id].state == "failed"
+        t = s2.ask()                        # resumes cleanly
+        s2.tell(t.trial_id, obj(t.x))
+        assert s2.best().y <= s.best().y + 1e-12
+
+
+def test_bo_beats_random_search():
+    from repro.bo.sampler import GPSampler
+    from repro.bo.space import BoxSpace
+    rng = np.random.default_rng(0)
+    space = BoxSpace.cube(3, -2.0, 2.0)
+
+    def obj(x):
+        return float(np.sum((x - 0.7) ** 2))
+
+    s = GPSampler(space, strategy="dbe_vec", seed=0, n_startup_trials=6)
+    best_bo = s.optimize(obj, 22).y
+    xs = space.sample(rng, 22)
+    best_rand = min(obj(x) for x in xs)
+    assert best_bo < best_rand, (best_bo, best_rand)
