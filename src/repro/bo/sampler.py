@@ -24,7 +24,9 @@ import numpy as np
 from repro.bo.space import BoxSpace
 from repro.core.acquisition import logei_acq
 from repro.core.mso import MsoOptions, MsoResult, maximize_acqf
+from repro.engine import EvalEngine, fused_logei_acq, resolve_backend
 from repro.gp.fit import fit_gp, standardize
+from repro.gp.gpr import with_kinv
 
 
 @dataclass
@@ -44,6 +46,7 @@ class SamplerStats:
     acqf_time: float = 0.0
     acqf_iters: List[float] = field(default_factory=list)
     acqf_rounds: List[int] = field(default_factory=list)
+    engine: Optional[dict] = None       # last EvalEngine.stats_snapshot()
 
 
 class GPSampler:
@@ -56,20 +59,31 @@ class GPSampler:
         strategy: str = "dbe",
         n_startup_trials: int = 10,
         n_restarts: int = 10,
-        mso_options: MsoOptions = MsoOptions(),
+        mso_options: Optional[MsoOptions] = None,
         seed: int = 0,
         pad_multiple: int = 32,
         gp_fit_restarts: int = 2,
+        posterior_backend: str = "auto",
     ):
         self.space = space
         self.strategy = strategy
         self.n_startup = n_startup_trials
         self.B = n_restarts
-        self.mso_options = mso_options
+        # fresh per instance: a shared default dataclass would leak option
+        # mutations across samplers
+        self.mso_options = (mso_options if mso_options is not None
+                            else MsoOptions())
         self.rng = np.random.default_rng(seed)
         self.seed = seed
         self.pad_multiple = pad_multiple
         self.gp_fit_restarts = gp_fit_restarts
+        self.posterior_backend = resolve_backend(posterior_backend)
+        # ONE evaluation engine for the whole BO run: every trial's MSO
+        # (any strategy) reuses its shape-bucketed jit caches, so compile
+        # counts stay O(log B · #GP-size-buckets), not O(trials)
+        self._acq_fn = (logei_acq if self.posterior_backend == "xla"
+                        else fused_logei_acq(self.posterior_backend))
+        self.engine = EvalEngine(self._acq_fn)
         self.trials: List[Trial] = []
         self.stats = SamplerStats()
         self.last_mso: Optional[MsoResult] = None
@@ -120,6 +134,8 @@ class GPSampler:
         gp = fit_gp(jnp.asarray(U), y_std, n_restarts=self.gp_fit_restarts,
                     seed=self.seed + len(self.trials),
                     pad_bucket=self.pad_multiple)
+        if self.posterior_backend != "xla":
+            gp = with_kinv(gp)      # fused quadratic-form posterior input
         self.stats.n_gp_fits += 1
         self.stats.fit_time += time.perf_counter() - t0
 
@@ -131,13 +147,15 @@ class GPSampler:
         x0 = np.concatenate([inc[None], rand], 0)
 
         t0 = time.perf_counter()
-        res = maximize_acqf(logei_acq, x0, 0.0, 1.0,
+        res = maximize_acqf(self._acq_fn, x0, 0.0, 1.0,
                             acq_state=(gp, best_val),
                             strategy=self.strategy,
-                            options=self.mso_options)
+                            options=self.mso_options,
+                            engine=self.engine)
         self.stats.acqf_time += time.perf_counter() - t0
         self.stats.acqf_iters.append(float(np.median(res.n_iters)))
         self.stats.acqf_rounds.append(res.n_rounds)
+        self.stats.engine = res.engine_stats
         self.last_mso = res
         return self.space.from_unit(np.clip(res.best_x, 0.0, 1.0))
 

@@ -14,7 +14,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.gp.gpr import GPState, predict
+from repro.gp.gpr import GPState, predict, predict_joint
 
 Array = jax.Array
 
@@ -92,6 +92,51 @@ def ucb_acq(state, xb: Array) -> Array:
     gp, beta = state
     mean, var = predict(gp, xb)
     return mean + beta * jnp.sqrt(var)
+
+
+def _log_softplus(x: Array) -> Array:
+    """log(softplus(x)), stable over all x (→ x for x ≪ 0)."""
+    sp = jax.nn.softplus(jnp.maximum(x, -30.0))
+    return jnp.where(x < -30.0, x, jnp.log(sp + 1e-300))
+
+
+def qlogei_acq(state, xb: Array, *, tau_max: float = 1e-2,
+               tau_relu: float = 1e-3) -> Array:
+    """Joint q-batch LogEI: ``state = (GPState, best, eps)``, xb (k, q, D).
+
+    MC qLogEI in the smoothed formulation of Ament et al. 2023: for each
+    candidate block the joint posterior over its q points is sampled with
+    *fixed* base draws ``eps`` (S, q) — common random numbers keep the
+    surface deterministic and differentiable for the QN optimizers — and
+    the max over the q points / relu are softened by ``logsumexp`` /
+    ``softplus`` so gradients reach every batch element:
+
+        qLogEI ≈ log E_s[ τ_r·softplus( τ_m·logsumexp((f_s − best)/τ_m) / τ_r ) ]
+
+    Module-level pure function (paired with per-call ``eps`` passed inside
+    ``state``) ⇒ the engine's jit cache keys on shapes only.
+    """
+    gp, best, eps = state
+
+    def one(xq):                                   # (q, D) -> ()
+        mean, cov = predict_joint(gp, xq)
+        Lc = jnp.linalg.cholesky(cov)
+        samples = mean[None, :] + eps @ Lc.T       # (S, q)
+        z = samples - best
+        smax = tau_max * jax.scipy.special.logsumexp(z / tau_max, axis=-1)
+        log_ei_s = jnp.log(tau_relu) + _log_softplus(smax / tau_relu)
+        S = eps.shape[0]
+        return jax.scipy.special.logsumexp(log_ei_s) - jnp.log(float(S))
+
+    return jax.vmap(one)(xb)
+
+
+def qlogei_state(gp: GPState, best, q: int, *, n_samples: int = 64,
+                 seed: int = 0):
+    """Build the ``(gp, best, eps)`` state tuple for ``qlogei_acq``."""
+    eps = jax.random.normal(jax.random.PRNGKey(seed), (n_samples, q),
+                            gp.y_train.dtype)
+    return (gp, jnp.asarray(best, gp.y_train.dtype), eps)
 
 
 def make_logei(gp: GPState, best: float) -> AcqBatched:

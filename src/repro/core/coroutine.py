@@ -14,6 +14,10 @@ Task codes of scipy>=1.15's C ``setulb`` (verified empirically):
   3 = FG   (evaluate objective+gradient at ``x``)
   1 = NEW_X (one QN iteration finished)
   2/4 = converged, 5 = user stop, anything else = error/stop.
+
+scipy<1.15 ships the original Fortran ``setulb`` whose task channel is a
+60-char string ('FG...', 'NEW_X', 'CONV...'); ``_SetulbDriver`` adapts both
+APIs to the integer codes above so the worker logic is version-agnostic.
 """
 from __future__ import annotations
 
@@ -26,6 +30,69 @@ from scipy.optimize import _lbfgsb
 
 _TASK_FG = 3
 _TASK_NEW_X = 1
+_TASK_CONV = 2
+_TASK_STOP = 5
+_TASK_ERROR = 99
+
+# scipy>=1.15 rewrote setulb in C with integer task codes and no
+# iprint/csave; detect which ABI this interpreter has once at import.
+_HAS_C_SETULB = "iprint" not in (_lbfgsb.setulb.__doc__ or "iprint")
+
+
+class _SetulbDriver:
+    """Reverse-communication L-BFGS-B adapted to one integer task code.
+
+    Owns the solver workspace for one restart; ``step()`` advances the
+    underlying ``setulb`` once and returns one of the ``_TASK_*`` codes.
+    ``x``/``f``/``g`` are the live in/out buffers (f and g must be written
+    by the caller before the step that follows a ``_TASK_FG``).
+    """
+
+    def __init__(self, x0, low, up, nbd, m, factr, pgtol, maxls):
+        n = x0.size
+        self.m, self.factr, self.pgtol, self.maxls = m, factr, pgtol, maxls
+        self.x = x0
+        self.f = np.array(0.0, np.float64)
+        self.g = np.zeros(n, np.float64)
+        self.low, self.up, self.nbd = low, up, nbd
+        self.wa = np.zeros(2 * m * n + 5 * n + 11 * m * m + 8 * m,
+                           np.float64)
+        self.iwa = np.zeros(3 * n, np.int32)
+        self.lsave = np.zeros(4, np.int32)
+        self.isave = np.zeros(44, np.int32)
+        self.dsave = np.zeros(29, np.float64)
+        if _HAS_C_SETULB:
+            self.task = np.zeros(2, np.int32)
+            self.ln_task = np.zeros(2, np.int32)
+        else:
+            self.task = np.zeros(1, "S60")
+            self.task[:] = b"START"
+            self.csave = np.zeros(1, "S60")
+
+    def step(self) -> int:
+        if _HAS_C_SETULB:
+            _lbfgsb.setulb(self.m, self.x, self.low, self.up, self.nbd,
+                           self.f, self.g, self.factr, self.pgtol, self.wa,
+                           self.iwa, self.task, self.lsave, self.isave,
+                           self.dsave, self.maxls, self.ln_task)
+            t = int(self.task[0])
+            if t in (_TASK_FG, _TASK_NEW_X, _TASK_CONV, 4, _TASK_STOP):
+                return _TASK_CONV if t == 4 else t
+            return _TASK_ERROR
+        _lbfgsb.setulb(self.m, self.x, self.low, self.up, self.nbd,
+                       self.f, self.g, self.factr, self.pgtol, self.wa,
+                       self.iwa, self.task, -1, self.csave, self.lsave,
+                       self.isave, self.dsave, self.maxls)
+        t = self.task.tobytes()
+        if t.startswith(b"FG"):
+            return _TASK_FG
+        if t.startswith(b"NEW_X"):
+            return _TASK_NEW_X
+        if t.startswith(b"CONV"):
+            return _TASK_CONV
+        if t.startswith(b"STOP"):
+            return _TASK_STOP
+        return _TASK_ERROR
 
 EvalRequest = np.ndarray          # the point the worker wants evaluated
 EvalResult = Tuple[float, np.ndarray]
@@ -61,29 +128,21 @@ def lbfgsb_worker(
     n = x0.size
     st = stats if stats is not None else WorkerStats()
     x = np.clip(np.asarray(x0, np.float64).copy(), lower, upper)
-    f = np.array(0.0, np.float64)
-    g = np.zeros(n, np.float64)
     nbd = np.full(n, 2, np.int32)          # both-sided bounds (BO boxes)
     low = np.ascontiguousarray(
         np.broadcast_to(np.asarray(lower, np.float64), (n,)))
     up = np.ascontiguousarray(
         np.broadcast_to(np.asarray(upper, np.float64), (n,)))
-    wa = np.zeros(2 * m * n + 5 * n + 11 * m * m + 8 * m, np.float64)
-    iwa = np.zeros(3 * n, np.int32)
-    task = np.zeros(2, np.int32)
-    ln_task = np.zeros(2, np.int32)
-    lsave = np.zeros(4, np.int32)
-    isave = np.zeros(44, np.int32)
-    dsave = np.zeros(29, np.float64)
+    drv = _SetulbDriver(x, low, up, nbd, m, factr, pgtol, maxls)
 
     while True:
-        _lbfgsb.setulb(m, x, low, up, nbd, f, g, factr, pgtol, wa, iwa,
-                       task, lsave, isave, dsave, maxls, ln_task)
-        t = int(task[0])
+        t = drv.step()
         if t == _TASK_FG:
             fv, gv = yield x              # suspend; evaluator resumes us
-            f = np.array(fv, np.float64)
-            g = np.asarray(gv, np.float64)
+            drv.f = np.array(fv, np.float64)
+            # hard copy: gv may be a read-only view of a device buffer,
+            # but setulb takes g as intent(inout)
+            drv.g = np.array(gv, np.float64, copy=True)
             st.n_evals += 1
         elif t == _TASK_NEW_X:
             st.n_iters += 1
@@ -91,10 +150,10 @@ def lbfgsb_worker(
                 st.status = "maxiter"
                 break
         else:
-            st.status = "converged" if t in (2, 4) else f"stop({t})"
+            st.status = "converged" if t == _TASK_CONV else f"stop({t})"
             break
     st.x = x.copy()
-    st.f = float(f)
+    st.f = float(drv.f)
     return st
 
 

@@ -11,33 +11,50 @@ Four strategies behind one API (`maximize_acqf`):
                  L-BFGS-B (`core.lbfgsb`), one jitted program, zero host syncs.
 
 All strategies *maximize* the acquisition function (internally minimizing its
-negation, matching BoTorch/Optuna conventions).
+negation, matching BoTorch/Optuna conventions), and ALL of them route their
+evaluations through one :class:`repro.engine.EvalEngine`: the engine owns the
+jitted ``(-acq, -∇acq)`` primitive, the shape-bucketed pad-or-shrink
+schedule for shrinking active sets, and the q-batch (joint-candidate)
+layout.  The strategies differ only in who drives the quasi-Newton updates.
 
 Compilation discipline: the acquisition is passed as a *module-level pure
 function* ``acq_fn(state, X) -> (k,)`` plus a pytree ``state`` (GP arrays,
-incumbent, ...).  The jitted evaluators key their cache on the function
-identity and shapes only, so a 300-trial BO run with size-bucketed GP states
-compiles each strategy a handful of times total.
+incumbent, ...).  The engine's jit caches key on the function identity and
+shapes only, so a 300-trial BO run with size-bucketed GP states compiles
+each strategy a handful of times total.
+
+q-batch mode: with ``q > 1`` each restart optimizes a *joint* block of q
+candidates (``x0``: (B, q, D); ``acq_fn`` receives (k, q, D)) — the
+workload of joint q-EI maximization (Wilson et al. 2018).
 """
 from __future__ import annotations
 
-import functools
 import time
 from dataclasses import dataclass
-from typing import Any, Callable, Optional, Tuple
+from typing import Any, Callable, Optional, TYPE_CHECKING
+
+if TYPE_CHECKING:                      # engine is imported lazily at runtime
+    from repro.engine.engine import EvalEngine
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import coroutine as co
-from repro.core.lbfgsb import LbfgsbOptions, lbfgsb_minimize
+from repro.core.lbfgsb import LbfgsbOptions
+# NOTE: only the dependency-free repro.engine.plan may be imported here.
+# repro.engine.engine is imported lazily inside maximize_acqf: it imports
+# core.lbfgsb, whose package __init__ re-enters this module — so when
+# repro.engine is imported FIRST, engine.engine is mid-initialization at
+# this point and a top-level `from repro.engine.engine import ...` raises
+# ImportError (partially initialized module).  Verified both orders.
+from repro.engine.plan import EvalPlan
 
 Array = jax.Array
 
 STRATEGIES = ("seq", "cbe", "dbe", "dbe_vec")
 
-# acq_fn(state, X:(k,D)) -> (k,) acquisition values (maximization scale)
+# acq_fn(state, X:(k,D)|(k,q,D)) -> (k,) acquisition values (max scale)
 AcqStateFn = Callable[[Any, Array], Array]
 
 
@@ -48,63 +65,22 @@ class MsoOptions:
     pgtol: float = 1e-2          # paper: ||∇α||_inf ≤ 1e-2
     maxls: int = 25
     ftol: float = 0.0            # disabled by default, like the paper
+    bucketed: bool = True        # geometric eval buckets (False: pad-to-B)
 
 
 @dataclass
 class MsoResult:
-    x: np.ndarray                # (B, D) per-restart maximizers
+    x: np.ndarray                # (B, D) / (B, q, D) per-restart maximizers
     acq: np.ndarray              # (B,)  acquisition values (max scale)
-    best_x: np.ndarray           # (D,)
+    best_x: np.ndarray           # (D,) / (q, D)
     best_acq: float
     n_iters: np.ndarray          # (B,) QN iterations per restart
     n_evals: np.ndarray          # (B,) objective evals per restart
     n_rounds: int                # batched evaluation rounds (wall-clock proxy)
     wall_time: float
     strategy: str
-
-
-# ---------------------------------------------------------------------------
-# jitted evaluators (cache keyed on acq_fn identity + shapes)
-# ---------------------------------------------------------------------------
-
-@functools.partial(jax.jit, static_argnums=0)
-def _neg_value_and_grad(acq_fn: AcqStateFn, state, X):
-    f = -acq_fn(state, X)
-    g = jax.grad(lambda Z: -jnp.sum(acq_fn(state, Z)))(X)
-    return f, g
-
-
-def make_neg_batch_eval(acq_fn: AcqStateFn, state,
-                        pad_to: Optional[int] = None) -> co.BatchEvalFn:
-    """numpy-facing batched (value, grad) evaluator of ``-acq``.
-
-    When ``pad_to`` is given, smaller active sets are padded to a fixed batch
-    so one compiled executable serves the whole shrinking schedule (this is
-    what the paper's 'batch shrinks progressively' turns into under XLA's
-    static shapes; `dbe_vec` measures the masked-lockstep alternative).
-    """
-
-    def batch_eval(X: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
-        k, D = X.shape
-        if pad_to is not None and k < pad_to:
-            Xp = np.concatenate([X, np.repeat(X[-1:], pad_to - k, 0)], 0)
-        else:
-            Xp = X
-        f, g = _neg_value_and_grad(acq_fn, state, jnp.asarray(Xp))
-        return (np.asarray(f)[:k], np.asarray(g)[:k])
-
-    return batch_eval
-
-
-@functools.partial(jax.jit, static_argnums=(0, 5))
-def _run_vectorized(acq_fn: AcqStateFn, state, x0, lower, upper,
-                    opts: LbfgsbOptions):
-    def fun_batched(X):
-        f = -acq_fn(state, X)
-        g = jax.grad(lambda Z: -jnp.sum(acq_fn(state, Z)))(X)
-        return f, g
-
-    return lbfgsb_minimize(fun_batched, x0, lower, upper, opts)
+    q: int = 1
+    engine_stats: Optional[dict] = None   # EvalEngine.stats_snapshot()
 
 
 # ---------------------------------------------------------------------------
@@ -119,64 +95,93 @@ def maximize_acqf(
     *,
     acq_state: Any = None,
     strategy: str = "dbe",
-    options: MsoOptions = MsoOptions(),
+    options: Optional[MsoOptions] = None,
+    q: int = 1,
+    engine: Optional["EvalEngine"] = None,   # noqa: F821 (lazy import)
 ) -> MsoResult:
-    """Run MSO with the chosen strategy.  ``x0``: (B, D) restart points.
+    """Run MSO with the chosen strategy.
 
+    ``x0``: (B, D) restart points, or (B, q, D) joint blocks when q > 1.
     ``acq_fn(state, X)`` should be a module-level function for jit-cache
     reuse; pass per-trial data (fitted GP, incumbent) through ``acq_state``.
+    ``engine``: reuse a long-lived :class:`EvalEngine` (a BO sampler keeps
+    one per run); defaults to the process-wide engine for ``acq_fn``.
     """
     if strategy not in STRATEGIES:
         raise ValueError(f"strategy must be one of {STRATEGIES}")
+    options = options if options is not None else MsoOptions()
+
     x0 = np.asarray(x0, np.float64)
-    B, D = x0.shape
+    if q > 1:
+        if x0.ndim != 3 or x0.shape[1] != q:
+            raise ValueError(f"q={q} needs x0 of shape (B, q, D); "
+                             f"got {x0.shape}")
+    elif x0.ndim != 2:
+        raise ValueError(f"x0 must be (B, D); got {x0.shape}")
+    B = x0.shape[0]
+    D = x0.shape[-1]
+
+    from repro.engine.engine import default_engine
+
+    plan = EvalPlan.for_batch(B, D, q=q, bucketed=options.bucketed)
+    eng = engine if engine is not None else default_engine(acq_fn)
+
+    # flat (B, q·D) view for the QN solvers; bounds tile across the q axis
+    x0f = x0.reshape(B, plan.flat_dim)
     lower = np.broadcast_to(np.asarray(lower, np.float64), (D,))
     upper = np.broadcast_to(np.asarray(upper, np.float64), (D,))
+    lowf = np.tile(lower, q)
+    upf = np.tile(upper, q)
 
     if strategy == "dbe_vec":
         opts = LbfgsbOptions(m=options.m, maxiter=options.maxiter,
                              pgtol=options.pgtol, ftol=options.ftol,
                              maxls=options.maxls)
         t0 = time.perf_counter()
-        res = _run_vectorized(acq_fn, acq_state, jnp.asarray(x0),
-                              jnp.asarray(np.broadcast_to(lower, (B, D))),
-                              jnp.asarray(np.broadcast_to(upper, (B, D))),
-                              opts)
+        res = eng.run_lockstep(
+            acq_state, jnp.asarray(x0f),
+            jnp.asarray(np.broadcast_to(lowf, x0f.shape)),
+            jnp.asarray(np.broadcast_to(upf, x0f.shape)),
+            opts, plan)
         res = jax.tree.map(np.asarray, res)
         wall = time.perf_counter() - t0
         acq = -res.f
         best = int(np.argmax(acq))
-        return MsoResult(x=res.x, acq=acq, best_x=res.x[best],
+        xs = res.x.reshape(x0.shape)
+        return MsoResult(x=xs, acq=acq, best_x=xs[best],
                          best_acq=float(acq[best]), n_iters=res.k,
                          n_evals=res.n_evals, n_rounds=int(res.rounds),
-                         wall_time=wall, strategy="dbe_vec")
+                         wall_time=wall, strategy="dbe_vec", q=q,
+                         engine_stats=eng.stats_snapshot())
 
-    batch_eval = make_neg_batch_eval(acq_fn, acq_state, pad_to=B)
+    batch_eval = eng.evaluator(acq_state, plan)
     kw = dict(m=options.m, maxiter=options.maxiter, pgtol=options.pgtol,
               maxls=options.maxls, factr=0.0)
     t0 = time.perf_counter()
     if strategy == "seq":
-        out = co.run_seq_opt(batch_eval, x0, lower, upper, **kw)
+        out = co.run_seq_opt(batch_eval, x0f, lowf, upf, **kw)
     elif strategy == "cbe":
-        out = co.run_cbe(batch_eval, x0, lower, upper, **kw)
+        out = co.run_cbe(batch_eval, x0f, lowf, upf, **kw)
     else:
-        out = co.run_dbe_coroutine(batch_eval, x0, lower, upper, **kw)
+        out = co.run_dbe_coroutine(batch_eval, x0f, lowf, upf, **kw)
     wall = time.perf_counter() - t0
 
     acq = -out.f
     best = int(np.argmax(acq))
-    return MsoResult(x=out.x, acq=acq, best_x=out.x[best],
+    xs = out.x.reshape(x0.shape)
+    return MsoResult(x=xs, acq=acq, best_x=xs[best],
                      best_acq=float(acq[best]), n_iters=out.n_iters,
                      n_evals=out.n_evals, n_rounds=out.n_rounds,
-                     wall_time=wall, strategy=strategy)
+                     wall_time=wall, strategy=strategy, q=q,
+                     engine_stats=eng.stats_snapshot())
 
 
 def maximize_acqf_closure(acq_batched, x0, lower, upper, *,
-                          strategy="dbe", options=MsoOptions()):
+                          strategy="dbe", options=None, q=1):
     """Convenience wrapper for plain closures ``X -> (k,)`` (tests/examples).
     Recompiles per closure identity — fine outside hot loops."""
     def fn(state, X):
         del state
         return acq_batched(X)
     return maximize_acqf(fn, x0, lower, upper, acq_state=None,
-                         strategy=strategy, options=options)
+                         strategy=strategy, options=options, q=q)

@@ -17,6 +17,20 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+
+def get_abstract_mesh():
+    """Version-compat ``jax.sharding.get_abstract_mesh``.
+
+    jax<0.5 has no abstract-mesh registry; there the ambient mesh is the
+    ``with Mesh(...)`` context's physical mesh, which exposes the same
+    ``empty``/``axis_names``/``axis_sizes`` surface the callers use.
+    """
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is not None:
+        return fn()
+    from jax._src import mesh as mesh_lib
+    return mesh_lib.thread_resources.env.physical_mesh
+
 # Per logical axis: ordered mesh-axis candidates (first match wins).
 AXIS_CANDIDATES = {
     "batch": ("pod", "data"),            # training/prefill activations
@@ -125,7 +139,7 @@ def param_shardings(tree, mesh: Mesh):
 
 def constrain(x: jax.Array, *axes: Optional[str]) -> jax.Array:
     """with_sharding_constraint via logical axes; no-op off-mesh."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     if mesh is None or mesh.empty or not mesh.axis_names:
         return x
     shape = dict(zip(mesh.axis_names, mesh.axis_sizes))

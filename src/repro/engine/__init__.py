@@ -1,0 +1,28 @@
+"""Batched acquisition-evaluation engine — one evaluation plane behind
+every MSO strategy (seq / cbe / dbe / dbe_vec), the BO sampler, and the
+serving path.
+
+Layering:  kernels (Pallas) → gp → **engine** → core.mso → bo / serve.
+
+* :class:`EvalPlan` — static workload description: shape buckets,
+  pad-or-shrink schedule, q-batch layout.
+* :class:`EvalEngine` — owns the jitted ``(-acq, -∇acq)`` primitive, its
+  shape-bucketed cache + compile counters, the host-facing padded
+  evaluator, and the device-resident lockstep entry.
+* :mod:`~repro.engine.posterior` — pluggable GP-posterior hot path
+  (Pallas-fused cross-gram + mean/variance, or classic Cholesky).
+* :class:`CountingJit` — the compile-aware jit primitive both this engine
+  and the serving engine build on.
+"""
+from repro.engine.cache import CountingJit
+from repro.engine.engine import (BatchEvalFn, EngineStats, EvalEngine,
+                                 default_engine)
+from repro.engine.plan import EvalPlan, bucket_ladder
+from repro.engine.posterior import (BACKENDS, fused_logei_acq, posterior,
+                                    resolve_backend)
+
+__all__ = [
+    "BACKENDS", "BatchEvalFn", "CountingJit", "EngineStats", "EvalEngine",
+    "EvalPlan", "bucket_ladder", "default_engine", "fused_logei_acq",
+    "posterior", "resolve_backend",
+]

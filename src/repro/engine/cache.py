@@ -1,0 +1,33 @@
+"""Compile-aware jit wrapper — the evaluation plane's cache primitive.
+
+``CountingJit`` wraps a function in ``jax.jit`` with a side-effecting
+trace counter: the increment executes at trace time only, so the counter
+ticks exactly once per compiled executable and never on cache hits.  Both
+the acquisition engine and the serving engine build their compiled planes
+from this, which is what makes "compiles per run" a first-class, testable
+metric (the ROADMAP's compilation-discipline requirement).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Sequence
+
+import jax
+
+
+class CountingJit:
+    """``jax.jit`` with an exact retrace/compile counter."""
+
+    def __init__(self, fn: Callable, *,
+                 static_argnums: Sequence[int] = ()):
+        self.n_compiles = 0
+
+        def counted(*args, **kwargs):
+            self.n_compiles += 1          # trace-time side effect
+            return fn(*args, **kwargs)
+
+        counted.__name__ = getattr(fn, "__name__", "counted")
+        self._jit = jax.jit(counted,
+                            static_argnums=tuple(static_argnums) or None)
+
+    def __call__(self, *args: Any, **kwargs: Any):
+        return self._jit(*args, **kwargs)

@@ -1,0 +1,183 @@
+"""The device-resident acquisition-evaluation engine.
+
+One object owns everything the four MSO strategies used to re-implement
+separately:
+
+* **negated value+grad construction** — the single definition of
+  ``(-acq, -∇acq)`` that the scipy coroutine workers, the C-BE flattened
+  solver, and the device-resident lockstep solver all consume;
+* **shape-bucketed jit caches** — evaluations are padded to an
+  :class:`~repro.engine.plan.EvalPlan` bucket so a whole shrinking-active-
+  set schedule (and a whole BO run over size-bucketed GP states) runs in a
+  handful of compiled executables, with an exact compile counter;
+* **pad-or-shrink scheduling** — the host-facing evaluator pads small
+  active sets up to a bucket and slices the results back, replacing the
+  old ``make_neg_batch_eval`` pad-to-max logic;
+* **q-batch layout** — candidates may be joint ``(q, D)`` blocks; the
+  engine reshapes between the QN solvers' flat ``(k, q·D)`` view and the
+  acquisition's ``(k, q, D)`` view.
+
+The masked-lockstep variant of active-set handling lives in
+``core.lbfgsb`` (it is intrinsic to the one-program formulation); the
+engine supplies that solver's batched evaluation function from the same
+acquisition primitive, so both realizations of "batch the evaluations"
+share one evaluation plane.
+
+Construct one engine per acquisition *function* and reuse it across
+trials: jit caches key on function identity + shapes, so per-trial data
+(fitted GP, incumbent) must flow through ``state`` as a pytree.
+``default_engine`` keeps a per-function registry for callers that don't
+manage engine lifetimes themselves.
+"""
+from __future__ import annotations
+
+import weakref
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lbfgsb import LbfgsbOptions, LbfgsbResult, lbfgsb_minimize
+from repro.engine.cache import CountingJit
+from repro.engine.plan import EvalPlan
+
+Array = jax.Array
+
+# acq_fn(state, X) -> (k,) with X (k, D) [q=1] or (k, q, D) [q>1]
+AcqStateFn = Callable[[Any, Array], Array]
+# host-facing batched evaluator: (k, q*D) -> ((k,), (k, q*D))
+BatchEvalFn = Callable[[np.ndarray], Tuple[np.ndarray, np.ndarray]]
+
+
+@dataclass
+class EngineStats:
+    """Evaluation/compile economy counters for one engine."""
+    n_rounds: int = 0            # host-facing batched evaluation rounds
+    n_points: int = 0            # live points evaluated (excl. padding)
+    n_padded: int = 0            # padded rows evaluated and discarded
+    bucket_rounds: Dict[int, int] = field(default_factory=dict)
+
+    def snapshot(self, engine: "EvalEngine") -> Dict[str, Any]:
+        return {
+            "n_compiles": engine.n_compiles,
+            "n_eval_compiles": engine._eval_jit.n_compiles,
+            "n_lockstep_compiles": engine._vec_jit.n_compiles,
+            "n_rounds": self.n_rounds,
+            "n_points": self.n_points,
+            "n_padded": self.n_padded,
+            "bucket_rounds": dict(self.bucket_rounds),
+        }
+
+
+class EvalEngine:
+    """Batched acquisition evaluation plane behind every MSO strategy."""
+
+    def __init__(self, acq_fn: AcqStateFn):
+        self.acq_fn = acq_fn
+        self.stats = EngineStats()
+
+        def _neg_value_and_grad(state, X):
+            f = -acq_fn(state, X)
+            g = jax.grad(lambda Z: -jnp.sum(acq_fn(state, Z)))(X)
+            return f, g
+
+        self._eval_jit = CountingJit(_neg_value_and_grad)
+
+        def _run_lockstep(state, x0, lower, upper, opts: LbfgsbOptions,
+                          plan: EvalPlan):
+            fun = self._device_fun(state, plan)
+            return lbfgsb_minimize(fun, x0, lower, upper, opts)
+
+        self._vec_jit = CountingJit(_run_lockstep, static_argnums=(4, 5))
+
+    @property
+    def n_compiles(self) -> int:
+        """Total XLA traces issued by this engine (all entry points)."""
+        return self._eval_jit.n_compiles + self._vec_jit.n_compiles
+
+    # ------------------------------------------------------------- device
+    def _device_fun(self, state, plan: EvalPlan):
+        """Batched ``(B, q·D) → ((B,), (B, q·D))`` evaluation for the
+        lockstep solver; traced inside the solver's program."""
+        acq_fn = self.acq_fn
+
+        def fun_batched(X: Array) -> Tuple[Array, Array]:
+            Xq = X.reshape((X.shape[0],) + plan.point_shape)
+            f = -acq_fn(state, Xq)
+            g = jax.grad(lambda Z: -jnp.sum(
+                acq_fn(state, Z.reshape((Z.shape[0],) + plan.point_shape))
+            ))(X)
+            return f, g
+
+        return fun_batched
+
+    def run_lockstep(self, state, x0: Array, lower: Array, upper: Array,
+                     opts: LbfgsbOptions, plan: EvalPlan) -> LbfgsbResult:
+        """dbe_vec: the whole multi-start solve as ONE jitted program
+        (zero per-iteration host syncs; masked lockstep active set)."""
+        return self._vec_jit(state, x0, lower, upper, opts, plan)
+
+    # --------------------------------------------------------------- host
+    def evaluator(self, state, plan: EvalPlan) -> BatchEvalFn:
+        """numpy-facing batched ``(-acq, -∇acq)`` evaluator for the scipy
+        coroutine strategies.
+
+        Pads each request up to ``plan.bucket_for(k)`` (repeating the last
+        row — values at real points are unaffected), evaluates once on
+        device, and slices the first k results back out.
+        """
+
+        def batch_eval(X: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+            k = X.shape[0]
+            b = plan.bucket_for(k)
+            if b > k:
+                Xp = np.concatenate([X, np.repeat(X[-1:], b - k, 0)], 0)
+            else:
+                Xp = X
+            Xd = jnp.asarray(Xp).reshape((b,) + plan.point_shape)
+            f, g = self._eval_jit(state, Xd)
+            self.stats.n_rounds += 1
+            self.stats.n_points += k
+            self.stats.n_padded += b - k
+            self.stats.bucket_rounds[b] = \
+                self.stats.bucket_rounds.get(b, 0) + 1
+            return (np.asarray(f)[:k],
+                    np.asarray(g).reshape(b, -1)[:k])
+
+        return batch_eval
+
+    # ------------------------------------------------------------- values
+    def values(self, state, X, plan: EvalPlan = None) -> np.ndarray:
+        """Acquisition values (maximization scale) at ``(k, ...)`` points.
+        Scoring entry for callers that only need values (re-ranking a
+        candidate pool, inspecting a surface); shares the jitted primitive
+        (and its cache) with the optimizers."""
+        Xd = jnp.asarray(X)
+        if plan is not None:
+            Xd = Xd.reshape((Xd.shape[0],) + plan.point_shape)
+        f, _ = self._eval_jit(state, Xd)
+        return -np.asarray(f)
+
+    def stats_snapshot(self) -> Dict[str, Any]:
+        return self.stats.snapshot(self)
+
+
+# Casual callers (tests, examples, one-off maximize_acqf invocations) get
+# a process-wide engine per acquisition function, restoring the seed
+# repo's module-level-jit compile economy without threading engine objects
+# through every call site.
+_DEFAULT_ENGINES: "weakref.WeakKeyDictionary[Callable, EvalEngine]" = \
+    weakref.WeakKeyDictionary()
+
+
+def default_engine(acq_fn: AcqStateFn) -> EvalEngine:
+    eng = _DEFAULT_ENGINES.get(acq_fn)
+    if eng is None:
+        eng = EvalEngine(acq_fn)
+        try:
+            _DEFAULT_ENGINES[acq_fn] = eng
+        except TypeError:          # non-weakref-able callables: no cache
+            pass
+    return eng

@@ -8,7 +8,7 @@ solve with B right-hand sides) is where D-BE's speedup comes from.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +27,10 @@ class GPState:
     Registered as a pytree with ``kernel`` as static aux data, so a GPState
     can flow through jit boundaries as a traced argument (the compilation-
     discipline requirement of the MSO layer).
+
+    ``kinv`` (K⁻¹, optional) backs the fused quadratic-form posterior used
+    by the evaluation engine's Pallas hot path; build it with
+    :func:`with_kinv`.  ``None`` keeps the classic Cholesky-solve path.
     """
     x_train: Array       # (n, D)
     y_train: Array       # (n,)  (standardized)
@@ -34,14 +38,16 @@ class GPState:
     chol: Array          # (n, n) lower Cholesky of K + (σ_n²+jitter) I
     alpha: Array         # (n,)   K⁻¹ y
     kernel: str = "matern52"
+    kinv: Optional[Array] = None   # (n, n) K⁻¹ for the fused posterior
 
     def tree_flatten(self):
         return ((self.x_train, self.y_train, self.params, self.chol,
-                 self.alpha), self.kernel)
+                 self.alpha, self.kinv), self.kernel)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, kernel=aux)
+        *head, kinv = children
+        return cls(*head, kernel=aux, kinv=kinv)
 
 
 def fit_gram(x: Array, y: Array, params: KernelParams,
@@ -51,6 +57,23 @@ def fit_gram(x: Array, y: Array, params: KernelParams,
     alpha = cho_solve((L, True), y)
     return GPState(x_train=x, y_train=y, params=params, chol=L,
                    alpha=alpha, kernel=kernel)
+
+
+def with_kinv(gp: GPState) -> GPState:
+    """Materialize K⁻¹ from the Cholesky factor (no-op if present).
+
+    One extra O(n³) triangular solve pair per fit — same order as the
+    Cholesky itself — in exchange for a posterior variance that is a pure
+    quadratic form, which is what the fused Pallas kernel consumes.
+    """
+    if gp.kinv is not None:
+        return gp
+    n = gp.x_train.shape[0]
+    eye = jnp.eye(n, dtype=gp.chol.dtype)
+    kinv = cho_solve((gp.chol, True), eye)
+    return GPState(x_train=gp.x_train, y_train=gp.y_train, params=gp.params,
+                   chol=gp.chol, alpha=gp.alpha, kernel=gp.kernel,
+                   kinv=kinv)
 
 
 def predict(gp: GPState, x_query: Array) -> Tuple[Array, Array]:
@@ -67,6 +90,26 @@ def predict(gp: GPState, x_query: Array) -> Tuple[Array, Array]:
     prior = gp.params.amplitude
     var = jnp.maximum(prior - jnp.sum(v * v, axis=0), 1e-16)
     return mean, var
+
+
+def predict_joint(gp: GPState, x_query: Array,
+                  jitter: float = 1e-10) -> Tuple[Array, Array]:
+    """Joint posterior over a q-batch: ((q,) mean, (q, q) covariance).
+
+    The q-batch acquisition path (joint qLogEI) needs cross-candidate
+    covariances, not just the diagonal ``predict`` returns.  Cost per
+    candidate block is O(q·n² + q²·n); the engine vmaps this over the k
+    restarts so one batched call serves the whole active set.
+    """
+    kfn = KERNELS[gp.kernel]
+    k_star = kfn(x_query, gp.x_train, gp.params)          # (q, n)
+    mean = k_star @ gp.alpha
+    v = solve_triangular(gp.chol, k_star.T, lower=True)   # (n, q)
+    k_qq = kfn(x_query, x_query, gp.params)               # (q, q)
+    cov = k_qq - v.T @ v
+    q = x_query.shape[0]
+    cov = cov + jitter * jnp.eye(q, dtype=cov.dtype)
+    return mean, cov
 
 
 def log_marginal_likelihood(x: Array, y: Array, params: KernelParams,
@@ -130,5 +173,12 @@ def pad_gp(gp: GPState, multiple: int = 32) -> GPState:
     L_p = jnp.zeros((n + n_pad, n + n_pad), dt)
     L_p = L_p.at[:n, :n].set(gp.chol)
     L_p = L_p.at[n:, n:].set(jnp.eye(n_pad, dtype=dt))
+    kinv_p = None
+    if gp.kinv is not None:
+        # blockdiag(K⁻¹, I): padded cross-kernel columns are 0 anyway, so
+        # the identity block never contributes to a real query's variance
+        kinv_p = jnp.zeros((n + n_pad, n + n_pad), dt)
+        kinv_p = kinv_p.at[:n, :n].set(gp.kinv)
+        kinv_p = kinv_p.at[n:, n:].set(jnp.eye(n_pad, dtype=dt))
     return GPState(x_train=x_p, y_train=y_p, params=gp.params,
-                   chol=L_p, alpha=alpha_p, kernel=gp.kernel)
+                   chol=L_p, alpha=alpha_p, kernel=gp.kernel, kinv=kinv_p)

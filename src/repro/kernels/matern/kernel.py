@@ -86,3 +86,103 @@ def matern52_gram(x1: jax.Array, x2: jax.Array, inv_lengthscale: jax.Array,
     )(a, b, asq, bsq, amp)
 
     return out[:n1, :n2].astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# fused posterior: cross-gram + mean/variance epilogue
+# ---------------------------------------------------------------------------
+
+VAR_FLOOR = 1e-16           # matches gpr.predict's variance clamp
+
+MAX_TRAIN = 2048            # K⁻¹ (N², f32) must fit VMEM alongside the tile
+
+
+def _posterior_kernel(a_ref, b_ref, asq_ref, bsq_ref, alpha_ref, kinv_ref,
+                      amp_ref, mean_ref, var_ref):
+    """One (TILE_Q,) slab of posterior mean/variance.
+
+    a_ref: (TILE_Q, D) pre-scaled queries; b_ref: (N, D) the WHOLE
+    pre-scaled training set (BO training sets are small — N ≤ MAX_TRAIN —
+    so K⁻¹ fits VMEM and the cross-gram row never round-trips to HBM);
+    alpha_ref: (N, 1) K⁻¹y; kinv_ref: (N, N).
+
+    The (TILE_Q, N) cross-gram slab is built once on MXU+VPU and feeds
+    both epilogues in-register:
+      mean = K α                (MXU, (TILE_Q, 1))
+      var  = σ_f² − rowsum((K K⁻¹) ∘ K)   (MXU + VPU)
+    """
+    a = a_ref[...]
+    b = b_ref[...]
+    ab = jax.lax.dot_general(a, b, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    d2 = asq_ref[...] + bsq_ref[...].T - 2.0 * ab
+    d2 = jnp.maximum(d2, 0.0)
+    r = jnp.sqrt(d2 + 1e-36)
+    k = amp_ref[0, 0] * (1.0 + SQRT5 * r + (5.0 / 3.0) * d2) * \
+        jnp.exp(-SQRT5 * r)                                  # (TILE_Q, N)
+
+    mean_ref[...] = k @ alpha_ref[...]                        # (TILE_Q, 1)
+    t = jax.lax.dot_general(k, kinv_ref[...], (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    quad = jnp.sum(t * k, axis=-1, keepdims=True)             # (TILE_Q, 1)
+    var_ref[...] = jnp.maximum(amp_ref[0, 0] - quad, VAR_FLOOR)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def matern52_posterior(xq: jax.Array, xt: jax.Array, alpha: jax.Array,
+                       kinv: jax.Array, inv_lengthscale: jax.Array,
+                       amplitude: jax.Array, *, interpret: bool = False):
+    """Pallas-fused GP posterior: ((q,) mean, (q,) variance).
+
+    Forward-only (see ``ops.matern52_posterior_op`` for the differentiable
+    wrapper).  Queries are padded to TILE_M multiples; training rows to
+    TILE_N multiples with zero-padded α and K⁻¹ (padded rows therefore
+    contribute exactly nothing to either epilogue).
+    """
+    nq, d = xq.shape
+    nt = xt.shape[0]
+    if nt > MAX_TRAIN:
+        raise ValueError(
+            f"fused posterior holds K⁻¹ in VMEM; n={nt} exceeds "
+            f"MAX_TRAIN={MAX_TRAIN} — use the xla backend")
+    dtype = xq.dtype
+
+    a = (xq * inv_lengthscale).astype(jnp.float32)
+    b = (xt * inv_lengthscale).astype(jnp.float32)
+    q_pad = (-nq) % TILE_M
+    n_pad = (-nt) % TILE_N
+    a = jnp.pad(a, ((0, q_pad), (0, 0)))
+    b = jnp.pad(b, ((0, n_pad), (0, 0)))
+    al = jnp.pad(alpha.astype(jnp.float32), (0, n_pad)).reshape(-1, 1)
+    ki = jnp.pad(kinv.astype(jnp.float32), ((0, n_pad), (0, n_pad)))
+    asq = jnp.sum(a * a, -1, keepdims=True)
+    bsq = jnp.sum(b * b, -1, keepdims=True)
+    amp = jnp.asarray(amplitude, jnp.float32).reshape(1, 1)
+
+    Q, N = a.shape[0], b.shape[0]
+    grid = (Q // TILE_M,)
+
+    mean, var = pl.pallas_call(
+        _posterior_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_M, d), lambda i: (i, 0)),
+            pl.BlockSpec((N, d), lambda i: (0, 0)),
+            pl.BlockSpec((TILE_M, 1), lambda i: (i, 0)),
+            pl.BlockSpec((N, 1), lambda i: (0, 0)),
+            pl.BlockSpec((N, 1), lambda i: (0, 0)),
+            pl.BlockSpec((N, N), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((TILE_M, 1), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_M, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Q, 1), jnp.float32),
+            jax.ShapeDtypeStruct((Q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a, b, asq, bsq, al, ki, amp)
+
+    return mean[:nq, 0].astype(dtype), var[:nq, 0].astype(dtype)

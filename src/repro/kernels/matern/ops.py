@@ -1,14 +1,25 @@
-"""Public op: Matérn-5/2 gram with backend dispatch.
+"""Public Matérn-5/2 ops with backend dispatch.
 
-``backend="pallas"`` targets TPU (or ``interpret=True`` for CPU validation);
-``backend="xla"`` is the pure-jnp path used by the CPU BO benchmarks.
+``backend="pallas"`` targets TPU (or ``interpret=True`` for CPU
+validation); ``backend="xla"`` is the pure-jnp path used by the CPU BO
+benchmarks.
+
+``matern52_posterior_op`` is the engine's hot evaluation backend: the
+fused cross-gram + mean/variance posterior.  The Pallas forward carries a
+custom VJP whose backward re-derives gradients from the jnp oracle — QN
+optimizers (which need ``∇acq`` every evaluation) get the fused forward
+*and* exact gradients without a hand-written transposed kernel.
 """
 from __future__ import annotations
 
+import functools
+from typing import Tuple
+
 import jax
 
-from repro.kernels.matern.kernel import matern52_gram
-from repro.kernels.matern.ref import matern52_gram_ref
+from repro.kernels.matern.kernel import matern52_gram, matern52_posterior
+from repro.kernels.matern.ref import (matern52_gram_ref,
+                                      matern52_posterior_ref)
 
 
 def matern52_cross(x1: jax.Array, x2: jax.Array, inv_lengthscale: jax.Array,
@@ -19,4 +30,43 @@ def matern52_cross(x1: jax.Array, x2: jax.Array, inv_lengthscale: jax.Array,
                              interpret=interpret)
     if backend == "xla":
         return matern52_gram_ref(x1, x2, inv_lengthscale, amplitude)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
+def _posterior_pallas(xq, xt, alpha, kinv, inv_lengthscale, amplitude,
+                      interpret):
+    return matern52_posterior(xq, xt, alpha, kinv, inv_lengthscale,
+                              amplitude, interpret=interpret)
+
+
+def _posterior_fwd(xq, xt, alpha, kinv, inv_lengthscale, amplitude,
+                   interpret):
+    out = matern52_posterior(xq, xt, alpha, kinv, inv_lengthscale,
+                             amplitude, interpret=interpret)
+    return out, (xq, xt, alpha, kinv, inv_lengthscale, amplitude)
+
+
+def _posterior_bwd(interpret, residuals, cotangents):
+    del interpret
+    _, vjp = jax.vjp(matern52_posterior_ref, *residuals)
+    return vjp(cotangents)
+
+
+_posterior_pallas.defvjp(_posterior_fwd, _posterior_bwd)
+
+
+def matern52_posterior_op(xq: jax.Array, xt: jax.Array, alpha: jax.Array,
+                          kinv: jax.Array, inv_lengthscale: jax.Array,
+                          amplitude: jax.Array, *, backend: str = "xla",
+                          interpret: bool = False
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """Fused GP posterior ((q,) mean, (q,) var); differentiable on every
+    backend.  ``kinv`` is the precomputed K⁻¹ of the training gram."""
+    if backend == "pallas":
+        return _posterior_pallas(xq, xt, alpha, kinv, inv_lengthscale,
+                                 amplitude, interpret)
+    if backend == "xla":
+        return matern52_posterior_ref(xq, xt, alpha, kinv, inv_lengthscale,
+                                      amplitude)
     raise ValueError(f"unknown backend {backend!r}")

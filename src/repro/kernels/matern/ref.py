@@ -1,10 +1,14 @@
-"""Pure-jnp oracle for the Matérn-5/2 gram kernel (no Pallas)."""
+"""Pure-jnp oracles for the Matérn-5/2 Pallas kernels (no Pallas)."""
 from __future__ import annotations
+
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
 SQRT5 = 2.2360679774997896
+
+VAR_FLOOR = 1e-16          # matches gpr.predict's posterior-variance clamp
 
 
 def matern52_gram_ref(x1: jax.Array, x2: jax.Array, inv_lengthscale: jax.Array,
@@ -18,3 +22,22 @@ def matern52_gram_ref(x1: jax.Array, x2: jax.Array, inv_lengthscale: jax.Array,
     r = jnp.sqrt(d2 + 1e-36)
     return amplitude * (1.0 + SQRT5 * r + (5.0 / 3.0) * d2) * \
         jnp.exp(-SQRT5 * r)
+
+
+def matern52_posterior_ref(xq: jax.Array, xt: jax.Array, alpha: jax.Array,
+                           kinv: jax.Array, inv_lengthscale: jax.Array,
+                           amplitude: jax.Array
+                           ) -> Tuple[jax.Array, jax.Array]:
+    """Fused GP posterior oracle: ((q,) mean, (q,) variance).
+
+    Quadratic-form formulation: ``mean = k* α``, ``var = σ_f² − k* K⁻¹ k*ᵀ``
+    (diagonal), with ``kinv = K⁻¹`` precomputed once per fit.  Equal in
+    exact arithmetic to the Cholesky form in ``gp.gpr.predict``; this is
+    the formulation the Pallas kernel fuses (one cross-gram build feeding
+    both epilogues, nothing written back to HBM but the two (q,) vectors).
+    """
+    k_star = matern52_gram_ref(xq, xt, inv_lengthscale, amplitude)   # (q, n)
+    mean = k_star @ alpha
+    quad = jnp.sum((k_star @ kinv) * k_star, axis=-1)
+    var = jnp.maximum(amplitude - quad, VAR_FLOOR)
+    return mean, var

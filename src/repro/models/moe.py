@@ -24,7 +24,8 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.distributed.sharding import Boxed, box, constrain
+from repro.distributed.sharding import (Boxed, box, constrain,
+                                         get_abstract_mesh)
 from repro.models.config import ModelConfig
 from repro.models.layers import _dense_init
 
@@ -122,7 +123,7 @@ def apply_moe(p: dict, cfg: ModelConfig, x: Array) -> Tuple[Array, Array]:
     k = cfg.experts_per_token
     E = cfg.n_experts
 
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     router_w = p["router"].value
     w_up, w_gate, w_down = (p["w_up"].value, p["w_gate"].value,
                             p["w_down"].value)

@@ -8,6 +8,12 @@ their cache writes land in a reserved trash slot (see layers.apply_attention),
 so heterogeneous slot progress never corrupts live entries.  On the
 production mesh the same decode fn lowers with the cache sharded per
 DESIGN.md §6.
+
+The compiled step goes through the evaluation plane's ``CountingJit``
+(same primitive as ``repro.engine.EvalEngine``), so serving exposes the
+same first-class compile accounting as the BO engine: ``stats["compiles"]``
+must stay at 1 across a steady-state run — a second trace means a shape
+leaked into the hot loop.
 """
 from __future__ import annotations
 
@@ -19,6 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.engine.cache import CountingJit
 from repro.models import lm
 from repro.models.config import ModelConfig
 
@@ -50,7 +57,7 @@ class ServeEngine:
         self.positions = np.zeros((slots,), np.int64)
         self.active: List[Optional[Request]] = [None] * slots
         self.queue: List[Request] = []
-        self._step_fn = jax.jit(
+        self._step_fn = CountingJit(
             lambda p, t, c, i: lm.decode_step(p, cfg, t, c, i))
         self.stats: Dict[str, Any] = {"steps": 0, "tokens": 0, "wall": 0.0}
 
@@ -66,6 +73,7 @@ class ServeEngine:
             jnp.asarray(pos, jnp.int32))
         self.stats["wall"] += time.perf_counter() - t0
         self.stats["steps"] += 1
+        self.stats["compiles"] = self._step_fn.n_compiles
         return np.asarray(logits)
 
     def _fill_slots(self):

@@ -1,0 +1,75 @@
+"""Property-test compat layer: real hypothesis when installed, otherwise a
+minimal deterministic fallback.
+
+The test suite only uses ``@settings(max_examples=..., deadline=None)``,
+``@given(name=st.integers(a, b) | st.floats(a, b))``.  The fallback draws
+``max_examples`` pseudo-random examples from a fixed-seed generator (plus
+the strategy endpoints first, which is where numeric code actually breaks)
+and runs the test once per example — weaker than real shrinking/replay, but
+it keeps the properties exercised on images where hypothesis cannot be
+installed.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis exists
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import itertools
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, lo, hi, integer):
+            self.lo, self.hi, self.integer = lo, hi, integer
+
+        def endpoints(self):
+            return (self.lo, self.hi)
+
+        def draw(self, rng):
+            if self.integer:
+                return int(rng.integers(self.lo, self.hi + 1))
+            return float(rng.uniform(self.lo, self.hi))
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(min_value, max_value, True)
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(float(min_value), float(max_value), False)
+
+    st = _Strategies()
+
+    def settings(max_examples=100, deadline=None, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            # no functools.wraps: preserving fn's signature would make
+            # pytest treat the strategy parameters as fixtures
+            def runner(*args, **kwargs):
+                n = getattr(runner, "_max_examples", 100)
+                rng = np.random.default_rng(0)
+                names = sorted(strategies)
+                corner = list(itertools.islice(
+                    itertools.product(
+                        *(strategies[k].endpoints() for k in names)),
+                    max(n // 4, 1)))
+                examples = corner + [
+                    tuple(strategies[k].draw(rng) for k in names)
+                    for _ in range(max(n - len(corner), 0))]
+                for ex in examples[:n]:
+                    fn(*args, **dict(zip(names, ex)), **kwargs)
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            return runner
+        return deco

@@ -3,7 +3,7 @@ hyperparameter fit sanity, property-based invariants."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.gp.fit import fit_gp, standardize
 from repro.gp.gpr import (GPState, fit_gram, log_marginal_likelihood,

@@ -1,7 +1,7 @@
 """BBOB objective sanity + search-space tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.bo.objectives import OBJECTIVES, make_objective
 from repro.bo.space import BoxSpace
