@@ -61,7 +61,7 @@ def bench(n: int, D: int, B: int = 10, reps: int = 5, seed: int = 0,
     for strategy in STRATEGIES:
         # fresh engine per strategy: compile counts are attributable
         engine = EvalEngine(acq_fn)
-        walls, iters, rounds = [], [], []
+        walls, iters, rounds, evals = [], [], [], []
         for r in range(reps + 1):
             x0 = rng.uniform(0, 1, (B, D))
             res = maximize_acqf(acq_fn, x0, 0.0, 1.0, acq_state=state,
@@ -72,6 +72,7 @@ def bench(n: int, D: int, B: int = 10, reps: int = 5, seed: int = 0,
             walls.append(res.wall_time)
             iters.append(float(np.median(res.n_iters)))
             rounds.append(res.n_rounds)
+            evals.append(float(np.sum(res.n_evals)))
         es = engine.stats_snapshot()
         rows.append({
             "n": n, "D": D, "B": B, "strategy": strategy,
@@ -79,6 +80,9 @@ def bench(n: int, D: int, B: int = 10, reps: int = 5, seed: int = 0,
             "wall_ms": 1e3 * float(np.median(walls)),
             "med_iters": float(np.median(iters)),
             "rounds": float(np.median(rounds)),
+            # per-run solver totals (dbe_vec included: run_lockstep now
+            # surfaces LbfgsbResult.rounds/n_evals into EngineStats)
+            "evals_per_run": float(np.median(evals)),
             "eval_rounds_total": es["n_rounds"],
             "points_evaluated": es["n_points"],
             "points_padded": es["n_padded"],

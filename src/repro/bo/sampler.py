@@ -4,6 +4,16 @@ This is the Optuna-integration analogue the paper ships: each `ask` fits a
 Matérn-5/2 GP on the observations, builds LogEI, and runs multi-start
 L-BFGS-B with a pluggable MSO strategy (`seq` / `cbe` / `dbe` / `dbe_vec`).
 
+Two suggest pipelines sit behind `ask()`:
+
+* the **host pipeline** (scipy strategies, and `dbe_vec` with
+  ``fused=False``): from-scratch `fit_gp` + host restart sampling +
+  `maximize_acqf` — one device round trip per stage;
+* the **fused pipeline** (default for `dbe_vec`): the whole
+  standardize → (incremental or full) refit → restart sampling → lockstep
+  MSO → argmax chain runs as ONE compiled device program per GP size
+  bucket (`engine/ask.py`), with rank-one GP updates between full refits.
+
 Fault tolerance at the controller level: every suggestion is journaled
 before being handed out; `tell` completes it; a crashed/preempted trial is
 simply re-suggested on resume (`GPSampler.load`).  The controller is the BO
@@ -23,10 +33,24 @@ import numpy as np
 
 from repro.bo.space import BoxSpace
 from repro.core.acquisition import logei_acq
+from repro.core.lbfgsb import LbfgsbOptions
 from repro.core.mso import MsoOptions, MsoResult, maximize_acqf
-from repro.engine import EvalEngine, fused_logei_acq, resolve_backend
-from repro.gp.fit import fit_gp, standardize
+from repro.engine import (AskConfig, AskEngine, EvalEngine, fused_logei_acq,
+                          resolve_backend)
+from repro.gp.fit import (fit_gp, pad_bucket_for, standardize,
+                          standardize_masked)
 from repro.gp.gpr import with_kinv
+
+
+def _standardize_bucketed(y: np.ndarray, pad: int) -> jax.Array:
+    """Standardize ``y`` with the moments computed over a pad-bucketed
+    masked reduction — bit-identical to the fused ask program's
+    ``standardize_masked``, sliced back to the live entries."""
+    n = y.shape[0]
+    b = pad_bucket_for(n, pad)
+    y_pad = jnp.zeros((b,), jnp.asarray(y).dtype).at[:n].set(jnp.asarray(y))
+    y_std, _, _ = standardize_masked(y_pad, jnp.arange(b) < n)
+    return y_std[:n]
 
 
 @dataclass
@@ -37,6 +61,7 @@ class Trial:
     state: str = "pending"           # pending | complete | failed
     ask_time: float = 0.0
     tell_time: float = 0.0
+    error: Optional[str] = None      # failure reason (failed trials)
 
 
 @dataclass
@@ -64,6 +89,9 @@ class GPSampler:
         pad_multiple: int = 32,
         gp_fit_restarts: int = 2,
         posterior_backend: str = "auto",
+        fused: Optional[bool] = None,
+        refit_interval: int = 8,
+        warm_start: bool = True,
     ):
         self.space = space
         self.strategy = strategy
@@ -78,15 +106,28 @@ class GPSampler:
         self.pad_multiple = pad_multiple
         self.gp_fit_restarts = gp_fit_restarts
         self.posterior_backend = resolve_backend(posterior_backend)
+        # fused one-program ask(): default for the device-resident
+        # strategy; the scipy strategies drive scipy from the host and
+        # cannot run inside one program
+        self.fused = (strategy == "dbe_vec") if fused is None else bool(fused)
+        if self.fused and strategy != "dbe_vec":
+            raise ValueError("fused ask() requires strategy='dbe_vec'; "
+                             f"got {strategy!r}")
+        self.refit_interval = refit_interval
+        self.warm_start = warm_start
         # ONE evaluation engine for the whole BO run: every trial's MSO
         # (any strategy) reuses its shape-bucketed jit caches, so compile
         # counts stay O(log B · #GP-size-buckets), not O(trials)
         self._acq_fn = (logei_acq if self.posterior_backend == "xla"
                         else fused_logei_acq(self.posterior_backend))
         self.engine = EvalEngine(self._acq_fn)
+        self._ask: Optional[AskEngine] = None       # fused pipeline state
+        self._observed_ids: set = set()             # trials in the ask GP
+        self._base_key = jax.random.PRNGKey(seed)   # restart-point stream
         self.trials: List[Trial] = []
         self.stats = SamplerStats()
         self.last_mso: Optional[MsoResult] = None
+        self.last_ask_info = None        # SuggestInfo of last fused ask
 
     # ----------------------------------------------------------------- api
     def ask(self) -> Trial:
@@ -99,14 +140,25 @@ class GPSampler:
         self.trials.append(t)
         return t
 
-    def tell(self, trial_id: int, y: float, *, failed: bool = False):
+    def tell(self, trial_id: int, y: float, *, failed: bool = False,
+             error: Optional[str] = None):
         t = self.trials[trial_id]
         t.y = None if failed else float(y)
         t.state = "failed" if failed else "complete"
+        t.error = error if failed else None
         t.tell_time = time.time()
 
     def best(self) -> Trial:
         done = [t for t in self.trials if t.state == "complete"]
+        if not done:
+            failed = [t for t in self.trials if t.state == "failed"]
+            msg = (f"no completed trials to report a best from "
+                   f"({len(self.trials)} trials: {len(failed)} failed, "
+                   f"{len(self.trials) - len(failed)} pending)")
+            errors = [t.error for t in failed if t.error]
+            if errors:
+                msg += f"; last failure: {errors[-1]}"
+            raise RuntimeError(msg)
         return min(done, key=lambda t: t.y)
 
     def optimize(self, objective, n_trials: int):
@@ -114,8 +166,11 @@ class GPSampler:
             t = self.ask()
             try:
                 self.tell(t.trial_id, objective(t.x))
-            except Exception:
-                self.tell(t.trial_id, 0.0, failed=True)
+            except Exception as e:          # noqa: BLE001 — trial isolation
+                # keep the run alive but preserve the reason: best() and
+                # the journal surface it instead of a silent failed state
+                self.tell(t.trial_id, 0.0, failed=True,
+                          error=f"{type(e).__name__}: {e}")
         return self.best()
 
     # -------------------------------------------------------- inner engine
@@ -126,11 +181,20 @@ class GPSampler:
         return X, y
 
     def _suggest(self) -> np.ndarray:
+        if self.fused:
+            return self._suggest_fused()
         X, y = self._observations()
         U = self.space.to_unit(X)
         # minimize y == maximize -y (standardized)
         t0 = time.perf_counter()
-        y_std, _, _ = standardize(jnp.asarray(-y))
+        if self.strategy == "dbe_vec":
+            # run the moments through the same padded masked reduction the
+            # fused program uses: reduction shape changes the last-ulp
+            # rounding, and the MAP fit amplifies a 1-ulp y_std difference
+            # into visibly different hyperparameters
+            y_std = _standardize_bucketed(-y, self.pad_multiple)
+        else:
+            y_std, _, _ = standardize(jnp.asarray(-y))
         gp = fit_gp(jnp.asarray(U), y_std, n_restarts=self.gp_fit_restarts,
                     seed=self.seed + len(self.trials),
                     pad_bucket=self.pad_multiple)
@@ -141,9 +205,16 @@ class GPSampler:
 
         best_val = jnp.max(y_std)
 
-        # restart points: incumbent + (B-1) uniform (GPSampler-style)
+        # restart points: incumbent + (B-1) uniform (GPSampler-style).
+        # dbe_vec draws them from the jax PRNG stream so the unfused path
+        # stays trajectory-identical to the fused one-program ask()
         inc = U[int(np.argmin(y))]
-        rand = self.rng.uniform(0.0, 1.0, (self.B - 1, self.space.dim))
+        if self.strategy == "dbe_vec":
+            rand = np.asarray(jax.random.uniform(
+                self._restart_key(), (self.B - 1, self.space.dim),
+                jnp.asarray(U).dtype))
+        else:
+            rand = self.rng.uniform(0.0, 1.0, (self.B - 1, self.space.dim))
         x0 = np.concatenate([inc[None], rand], 0)
 
         t0 = time.perf_counter()
@@ -159,6 +230,53 @@ class GPSampler:
         self.last_mso = res
         return self.space.from_unit(np.clip(res.best_x, 0.0, 1.0))
 
+    # ------------------------------------------------------- fused path
+    def _restart_key(self):
+        """Per-trial PRNG key for restart sampling (fused and unfused
+        dbe_vec share it — same key ⇒ same restart points)."""
+        return jax.random.fold_in(self._base_key, len(self.trials))
+
+    def _suggest_fused(self) -> np.ndarray:
+        done = [t for t in self.trials if t.state == "complete"]
+        if self._ask is None:
+            o = self.mso_options
+            self._ask = AskEngine(self.engine, AskConfig(
+                dim=self.space.dim, n_restarts=self.B,
+                backend=self.posterior_backend,
+                pad_bucket=self.pad_multiple,
+                refit_interval=self.refit_interval,
+                warm_start=self.warm_start,
+                gp_fit_restarts=self.gp_fit_restarts,
+                mso=LbfgsbOptions(m=o.m, maxiter=o.maxiter, pgtol=o.pgtol,
+                                  ftol=o.ftol, maxls=o.maxls)))
+        ask = self._ask
+        # lazy observation sync covers tell() and journal resume alike;
+        # keyed by trial id, not list position — out-of-order tells must
+        # not duplicate/drop observations (the host path rebuilds X, y
+        # from scratch each trial and is naturally immune)
+        for t in done:
+            if t.trial_id not in self._observed_ids:
+                ask.observe(self.space.to_unit(t.x), t.y)
+                self._observed_ids.add(t.trial_id)
+
+        t0 = time.perf_counter()
+        best_x, info = ask.suggest(self._restart_key(),
+                                   fit_seed=self.seed + len(self.trials))
+        wall = time.perf_counter() - t0
+        if info.kind != "incremental":
+            self.stats.n_gp_fits += 1
+        self.stats.acqf_time += wall
+        self.stats.acqf_iters.append(
+            float(np.median(np.asarray(info.n_iters))))
+        self.stats.acqf_rounds.append(int(info.rounds))
+        self.stats.engine = {**self.engine.stats_snapshot(),
+                             **ask.stats_snapshot()}
+        # per-restart state stays on device in the fused pipeline — only
+        # the suggestion (and scalar diagnostics) ever reach the host
+        self.last_mso = None
+        self.last_ask_info = info
+        return self.space.from_unit(np.clip(best_x, 0.0, 1.0))
+
     # ------------------------------------------------- journal (restart)
     def save(self, path: str):
         rec = {
@@ -168,7 +286,7 @@ class GPSampler:
             "upper": self.space.upper.tolist(),
             "trials": [
                 dict(trial_id=t.trial_id, x=t.x.tolist(), y=t.y,
-                     state=t.state) for t in self.trials
+                     state=t.state, error=t.error) for t in self.trials
             ],
         }
         tmp = path + ".tmp"
@@ -184,10 +302,12 @@ class GPSampler:
         s = cls(space, strategy=rec["strategy"], seed=rec["seed"], **kwargs)
         for tr in rec["trials"]:
             t = Trial(trial_id=tr["trial_id"], x=np.array(tr["x"]),
-                      y=tr["y"], state=tr["state"])
+                      y=tr["y"], state=tr["state"],
+                      error=tr.get("error"))
             if t.state == "pending":
                 # a trial that never came back (crash/preemption):
                 # mark failed; its parameters will be re-explored naturally.
                 t.state = "failed"
+                t.error = "trial never completed (crash/preemption)"
             s.trials.append(t)
         return s

@@ -87,6 +87,25 @@ class MsoResult:
 # public API
 # ---------------------------------------------------------------------------
 
+def mso_result_from_lockstep(res, x0_shape, wall: float, *, q: int = 1,
+                             engine_stats: Optional[dict] = None
+                             ) -> MsoResult:
+    """Materialize a device ``LbfgsbResult`` into an :class:`MsoResult`.
+
+    Shared by the ``dbe_vec`` branch below and the fused ask pipeline
+    (``engine/ask.py``) so both report the lockstep solve identically.
+    """
+    res = jax.tree.map(np.asarray, res)
+    acq = -res.f
+    best = int(np.argmax(acq))
+    xs = res.x.reshape(x0_shape)
+    return MsoResult(x=xs, acq=acq, best_x=xs[best],
+                     best_acq=float(acq[best]), n_iters=res.k,
+                     n_evals=res.n_evals, n_rounds=int(res.rounds),
+                     wall_time=wall, strategy="dbe_vec", q=q,
+                     engine_stats=engine_stats)
+
+
 def maximize_acqf(
     acq_fn: AcqStateFn,
     x0: np.ndarray,
@@ -143,16 +162,9 @@ def maximize_acqf(
             jnp.asarray(np.broadcast_to(lowf, x0f.shape)),
             jnp.asarray(np.broadcast_to(upf, x0f.shape)),
             opts, plan)
-        res = jax.tree.map(np.asarray, res)
         wall = time.perf_counter() - t0
-        acq = -res.f
-        best = int(np.argmax(acq))
-        xs = res.x.reshape(x0.shape)
-        return MsoResult(x=xs, acq=acq, best_x=xs[best],
-                         best_acq=float(acq[best]), n_iters=res.k,
-                         n_evals=res.n_evals, n_rounds=int(res.rounds),
-                         wall_time=wall, strategy="dbe_vec", q=q,
-                         engine_stats=eng.stats_snapshot())
+        return mso_result_from_lockstep(res, x0.shape, wall, q=q,
+                                        engine_stats=eng.stats_snapshot())
 
     batch_eval = eng.evaluator(acq_state, plan)
     kw = dict(m=options.m, maxiter=options.maxiter, pgtol=options.pgtol,

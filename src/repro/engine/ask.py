@@ -1,0 +1,274 @@
+"""The fused device-resident ask() pipeline — one compiled suggest program.
+
+PR 1 made the MSO inner solve device-resident (``dbe_vec``); this module
+fuses the *rest* of a BO trial around it.  One :class:`AskEngine` owns the
+whole suggest path as two jitted programs per GP size bucket:
+
+* **full program** — masked standardize → multi-start MAP hyperparameter
+  fit (``gp.fit.fit_padded_core``, θ warm-started from the previous
+  trial) → K⁻¹ materialization (fused-posterior backends) → device-side
+  restart sampling → lockstep L-BFGS-B MSO → argmax.  Runs at bucket
+  boundaries, every ``refit_interval`` trials, and as the exactness
+  fallback.
+* **incremental program** — masked standardize → rank-one Cholesky /
+  bordered-K⁻¹ append (``gp.fit.incremental_update``, O(n²), fixed θ) →
+  the same restart sampling → MSO → argmax.  Runs on every other trial:
+  the O(n³) refactorization and the MAP optimization never execute.
+
+Trial-to-trial state (padded X/y buffers, θ, Cholesky factor, K⁻¹) lives
+on device between calls; the incremental program *donates* the O(n²)
+factor buffers so steady-state trials update them in place (accelerator
+backends) and transfer only ``best_x`` (plus scalar stats) back to host.
+Both programs run through :class:`CountingJit`, so "compiles per run"
+stays an exact, testable O(#size-buckets) metric.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.scipy.linalg import cho_solve
+
+from repro.core.lbfgsb import LbfgsbOptions, lbfgsb_minimize
+from repro.engine.cache import CountingJit
+from repro.engine.engine import EvalEngine
+from repro.engine.plan import EvalPlan
+from repro.gp.fit import (FIT_OPTS, _FAR, fit_padded_core,
+                          incremental_update, pad_bucket_for,
+                          standardize_masked, theta_bounds,
+                          theta_init_grid, unpack_theta)
+from repro.gp.gpr import GPState
+from repro.gp.kernels import KernelParams
+
+Array = jax.Array
+
+# paper-style MSO defaults (mirrors core.mso.MsoOptions)
+_MSO_DEFAULT = LbfgsbOptions(m=10, maxiter=200, pgtol=1e-2, ftol=0.0,
+                             maxls=25)
+
+
+@dataclass(frozen=True)
+class AskConfig:
+    """Static description of one fused ask pipeline (hashable; everything
+    here is baked into the compiled programs via closure, never traced)."""
+    dim: int
+    n_restarts: int = 10             # B: incumbent + (B-1) uniform
+    kernel: str = "matern52"
+    backend: str = "xla"             # resolved posterior backend
+    pad_bucket: int = 32             # GP size-bucket quantum
+    refit_interval: int = 8          # full MAP refit cadence (≥1)
+    warm_start: bool = True          # seed the MAP fit from previous θ
+    gp_fit_restarts: int = 2
+    gp_fit_maxiter: int = 60
+    mso: LbfgsbOptions = _MSO_DEFAULT
+
+    def __post_init__(self):
+        if self.refit_interval < 1:
+            raise ValueError("refit_interval must be >= 1")
+        if self.n_restarts < 2:
+            raise ValueError("n_restarts must be >= 2")
+
+
+class SuggestInfo(NamedTuple):
+    """Per-trial diagnostics (small device scalars; convert lazily)."""
+    kind: str            # "full" | "incremental" | "fallback"
+    n_iters: Array       # (B,) QN iterations per restart
+    n_evals: Array       # (B,) active objective evals per restart
+    rounds: Array        # ()  batched evaluation rounds
+    best_acq: Array      # ()  acquisition value at the suggestion
+
+
+class AskEngine:
+    """Fused ask(): observe() appends, suggest() runs one device program."""
+
+    def __init__(self, engine: EvalEngine, cfg: AskConfig):
+        self.engine = engine
+        self.cfg = cfg
+        self._plan = EvalPlan.for_batch(cfg.n_restarts, cfg.dim)
+        self._fit_opts = FIT_OPTS._replace(maxiter=cfg.gp_fit_maxiter)
+        self._full_jit = CountingJit(self._full_impl)
+        # donate the O(n²) factor buffers: steady-state trials rewrite
+        # them in place instead of allocating fresh ones
+        self._incr_jit = CountingJit(self._incr_impl, donate_argnums=(5, 6))
+
+        # trial-to-trial device state
+        self._x: Optional[Array] = None       # (b, D) padded observations
+        self._y: Optional[Array] = None       # (b,)  raw objective values
+        self._n = 0                           # live observation count
+        self._theta: Optional[Array] = None   # (P,) fitted log-hypers
+        self._chol: Optional[Array] = None    # (b, b) padded factor
+        self._alpha: Optional[Array] = None   # (b,)
+        self._kinv: Optional[Array] = None    # (b, b) (fused backends)
+        self._n_fit = 0                       # observations in the factor
+        self._since_refit = 0
+        # economy counters
+        self.n_full_refits = 0
+        self.n_incremental = 0
+        self.n_fallbacks = 0
+
+    # ----------------------------------------------------------- host api
+    @property
+    def n_obs(self) -> int:
+        return self._n
+
+    @property
+    def bucket(self) -> int:
+        return 0 if self._x is None else self._x.shape[0]
+
+    def observe(self, x_unit: np.ndarray, y: float) -> None:
+        """Append one observation (unit-cube x, raw minimized y)."""
+        x_unit = np.asarray(x_unit).reshape(self.cfg.dim)
+        n_new = self._n + 1
+        b_needed = pad_bucket_for(n_new, self.cfg.pad_bucket)
+        if self._x is None or b_needed > self._x.shape[0]:
+            self._grow(b_needed)
+        self._x = self._x.at[self._n].set(
+            jnp.asarray(x_unit, self._x.dtype))
+        self._y = self._y.at[self._n].set(float(y))
+        self._n = n_new
+
+    def _grow(self, b: int) -> None:
+        """Move to a larger pad bucket; invalidates the factor state
+        (the next suggest() takes the full-refit program — by design the
+        only trials that pay an O(n³) cost or a fresh XLA trace)."""
+        D = self.cfg.dim
+        dt = self._x.dtype if self._x is not None else jnp.asarray(0.0).dtype
+        x = jnp.full((b, D), _FAR, dt) + jnp.arange(b, dtype=dt)[:, None]
+        y = jnp.zeros((b,), dt)
+        if self._x is not None:
+            x = x.at[:self._n].set(self._x[:self._n])
+            y = y.at[:self._n].set(self._y[:self._n])
+        self._x, self._y = x, y
+        self._chol = self._alpha = self._kinv = None
+
+    def suggest(self, key: Array, fit_seed: int
+                ) -> Tuple[np.ndarray, SuggestInfo]:
+        """One fused ask: returns (unit-cube best_x, diagnostics).
+
+        ``key`` drives the device-side restart sampling; ``fit_seed`` the
+        MAP multi-start jitter (matching ``fit_gp(seed=...)``).
+        """
+        if self._n < 2:
+            raise ValueError(
+                f"suggest() needs >= 2 observations, have {self._n}")
+        n_valid = jnp.asarray(self._n, jnp.int32)
+
+        # refit_interval=k ⇒ a full MAP refit every k-th suggest
+        # (k=1: every trial, i.e. incremental updates disabled)
+        incremental = (self._chol is not None
+                       and self._n - self._n_fit == 1
+                       and self._since_refit < self.cfg.refit_interval - 1)
+        kind = "incremental"
+        if incremental:
+            best_x, chol, alpha, kinv, ok, stats = self._incr_jit(
+                key, self._x, self._y, n_valid,
+                self._theta, self._chol, self._kinv)
+            if bool(ok):
+                self._chol, self._alpha, self._kinv = chol, alpha, kinv
+                self._since_refit += 1
+                self.n_incremental += 1
+            else:                     # exactness fallback: refit for real
+                self.n_fallbacks += 1
+                incremental = False
+                kind = "fallback"
+
+        if not incremental:
+            dt = self._x.dtype
+            init = None
+            if self.cfg.warm_start and self._theta is not None:
+                init = unpack_theta(self._theta, self.cfg.dim)
+            thetas = theta_init_grid(self.cfg.dim, dt,
+                                     self.cfg.gp_fit_restarts, fit_seed,
+                                     init=init)
+            tlo, tup = theta_bounds(self.cfg.dim, dt)
+            best_x, theta, chol, alpha, kinv, stats = self._full_jit(
+                key, self._x, self._y, n_valid, thetas,
+                jnp.broadcast_to(tlo, thetas.shape),
+                jnp.broadcast_to(tup, thetas.shape))
+            self._theta = theta
+            self._chol, self._alpha, self._kinv = chol, alpha, kinv
+            self._since_refit = 0
+            self.n_full_refits += 1
+            kind = "full" if kind == "incremental" else kind
+
+        self._n_fit = self._n
+        info = SuggestInfo(kind=kind, n_iters=stats[0], n_evals=stats[1],
+                           rounds=stats[2], best_acq=stats[3])
+        # the in-program lockstep solve bypasses run_lockstep, so feed
+        # the shared EngineStats economy counters here
+        self.engine.record_lockstep_economy(self.cfg.n_restarts,
+                                            info.rounds, info.n_evals)
+        return np.asarray(best_x), info
+
+    def gp_state(self) -> GPState:
+        """Reconstruct the current fitted GPState (tests/introspection)."""
+        if self._chol is None:
+            raise ValueError("no fitted state yet")
+        valid = jnp.arange(self.bucket) < self._n_fit
+        y_std, _, _ = standardize_masked(-self._y, valid)
+        return GPState(x_train=self._x, y_train=y_std,
+                       params=unpack_theta(self._theta, self.cfg.dim),
+                       chol=self._chol, alpha=self._alpha,
+                       kernel=self.cfg.kernel, kinv=self._kinv)
+
+    def stats_snapshot(self) -> dict:
+        return {
+            "n_full_refits": self.n_full_refits,
+            "n_incremental": self.n_incremental,
+            "n_fallbacks": self.n_fallbacks,
+            "n_full_compiles": self._full_jit.n_compiles,
+            "n_incr_compiles": self._incr_jit.n_compiles,
+            "n_ask_compiles": (self._full_jit.n_compiles
+                               + self._incr_jit.n_compiles),
+        }
+
+    # ------------------------------------------------------- device side
+    def _mso_tail(self, key, x, y_std, valid, params: KernelParams,
+                  chol, alpha, kinv):
+        """Shared back half of both programs: restart sampling → lockstep
+        MSO → selection.  Mirrors the host pipeline exactly (incumbent +
+        (B−1) uniform restarts, LogEI maximization, argmax over final f)."""
+        cfg = self.cfg
+        gp = GPState(x_train=x, y_train=y_std, params=params, chol=chol,
+                     alpha=alpha, kernel=cfg.kernel, kinv=kinv)
+        masked = jnp.where(valid, y_std, -jnp.inf)
+        best_val = jnp.max(masked)
+        inc = x[jnp.argmax(masked)]
+        rand = jax.random.uniform(key, (cfg.n_restarts - 1, cfg.dim),
+                                  x.dtype)
+        x0 = jnp.concatenate([inc[None], rand], 0)
+        fun = self.engine.device_fun((gp, best_val), self._plan)
+        res = lbfgsb_minimize(fun, x0, jnp.zeros_like(x0),
+                              jnp.ones_like(x0), cfg.mso)
+        best = jnp.argmax(-res.f)
+        stats = (res.k, res.n_evals, res.rounds, -res.f[best])
+        return res.x[best], stats
+
+    def _full_impl(self, key, x, y, n_valid, thetas, tlo, tup):
+        b, D = x.shape
+        valid = jnp.arange(b) < n_valid
+        y_std, _, _ = standardize_masked(-y, valid)
+        theta, chol, alpha, _ = fit_padded_core(
+            x, y_std, valid, thetas, tlo, tup,
+            dim=D, kernel=self.cfg.kernel, opts=self._fit_opts)
+        kinv = None
+        if self.cfg.backend != "xla":
+            kinv = cho_solve((chol, True), jnp.eye(b, dtype=x.dtype))
+        params = unpack_theta(theta, D)
+        best_x, stats = self._mso_tail(key, x, y_std, valid, params,
+                                       chol, alpha, kinv)
+        return best_x, theta, chol, alpha, kinv, stats
+
+    def _incr_impl(self, key, x, y, n_valid, theta, chol, kinv):
+        b, D = x.shape
+        valid = jnp.arange(b) < n_valid
+        y_std, _, _ = standardize_masked(-y, valid)
+        params = unpack_theta(theta, D)
+        chol_new, alpha, kinv_new, ok = incremental_update(
+            x, y_std, n_valid, params, chol, kinv, kernel=self.cfg.kernel)
+        best_x, stats = self._mso_tail(key, x, y_std, valid, params,
+                                       chol_new, alpha, kinv_new)
+        return best_x, chol_new, alpha, kinv_new, ok, stats

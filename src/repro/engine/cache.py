@@ -18,7 +18,8 @@ class CountingJit:
     """``jax.jit`` with an exact retrace/compile counter."""
 
     def __init__(self, fn: Callable, *,
-                 static_argnums: Sequence[int] = ()):
+                 static_argnums: Sequence[int] = (),
+                 donate_argnums: Sequence[int] = ()):
         self.n_compiles = 0
 
         def counted(*args, **kwargs):
@@ -26,8 +27,14 @@ class CountingJit:
             return fn(*args, **kwargs)
 
         counted.__name__ = getattr(fn, "__name__", "counted")
+        # donation lets steady-state callers (the fused ask path) reuse
+        # their O(n²) GP buffers in place; XLA ignores it on CPU, so gate
+        # there to avoid per-call "donated buffer unused" warnings
+        if jax.default_backend() == "cpu":
+            donate_argnums = ()
         self._jit = jax.jit(counted,
-                            static_argnums=tuple(static_argnums) or None)
+                            static_argnums=tuple(static_argnums) or None,
+                            donate_argnums=tuple(donate_argnums) or None)
 
     def __call__(self, *args: Any, **kwargs: Any):
         return self._jit(*args, **kwargs)

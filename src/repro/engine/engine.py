@@ -87,7 +87,7 @@ class EvalEngine:
 
         def _run_lockstep(state, x0, lower, upper, opts: LbfgsbOptions,
                           plan: EvalPlan):
-            fun = self._device_fun(state, plan)
+            fun = self.device_fun(state, plan)
             return lbfgsb_minimize(fun, x0, lower, upper, opts)
 
         self._vec_jit = CountingJit(_run_lockstep, static_argnums=(4, 5))
@@ -98,9 +98,10 @@ class EvalEngine:
         return self._eval_jit.n_compiles + self._vec_jit.n_compiles
 
     # ------------------------------------------------------------- device
-    def _device_fun(self, state, plan: EvalPlan):
+    def device_fun(self, state, plan: EvalPlan):
         """Batched ``(B, q·D) → ((B,), (B, q·D))`` evaluation for the
-        lockstep solver; traced inside the solver's program."""
+        lockstep solver; traced inside the solver's program (also consumed
+        by the fused ask program in ``engine/ask.py``)."""
         acq_fn = self.acq_fn
 
         def fun_batched(X: Array) -> Tuple[Array, Array]:
@@ -117,7 +118,23 @@ class EvalEngine:
                      opts: LbfgsbOptions, plan: EvalPlan) -> LbfgsbResult:
         """dbe_vec: the whole multi-start solve as ONE jitted program
         (zero per-iteration host syncs; masked lockstep active set)."""
-        return self._vec_jit(state, x0, lower, upper, opts, plan)
+        res = self._vec_jit(state, x0, lower, upper, opts, plan)
+        self.record_lockstep_economy(x0.shape[0], res.rounds, res.n_evals)
+        return res
+
+    def record_lockstep_economy(self, B: int, rounds, n_evals) -> None:
+        """Surface a device lockstep solve's evaluation economy into
+        EngineStats so the strategy is tracked like the host-facing ones:
+        every device round evaluates the full (frozen rows included)
+        B-batch, so rounds·B − Σ active-evals is the padding analogue.
+        Called by :meth:`run_lockstep` and the fused ask pipeline."""
+        rounds = int(rounds)
+        evals = int(np.sum(np.asarray(n_evals)))
+        self.stats.n_rounds += rounds
+        self.stats.n_points += evals
+        self.stats.n_padded += rounds * B - evals
+        self.stats.bucket_rounds[B] = \
+            self.stats.bucket_rounds.get(B, 0) + rounds
 
     # --------------------------------------------------------------- host
     def evaluator(self, state, plan: EvalPlan) -> BatchEvalFn:

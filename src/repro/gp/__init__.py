@@ -1,5 +1,7 @@
 from repro.gp.kernels import KernelParams, matern52, rbf, gram
-from repro.gp.gpr import (GPState, fit_gram, predict,
+from repro.gp.gpr import (GPState, cholesky_update, fit_gram, kinv_update,
                           log_marginal_likelihood,
-                          log_marginal_likelihood_masked, pad_gp)
-from repro.gp.fit import fit_gp, standardize
+                          log_marginal_likelihood_masked, pad_gp, predict,
+                          with_kinv)
+from repro.gp.fit import (fit_gp, incremental_update, standardize,
+                          standardize_masked)

@@ -9,7 +9,6 @@ a handful of times (once per bucket), not 300 times.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax
@@ -17,8 +16,9 @@ import jax.numpy as jnp
 from jax.scipy.linalg import cho_solve
 
 from repro.core.lbfgsb import LbfgsbOptions, lbfgsb_minimize
-from repro.gp.gpr import GPState, log_marginal_likelihood_masked
-from repro.gp.kernels import KernelParams, gram
+from repro.gp.gpr import (GPState, cholesky_update, kinv_update,
+                          log_marginal_likelihood_masked)
+from repro.gp.kernels import KERNELS, KernelParams, gram
 
 Array = jax.Array
 
@@ -29,6 +29,15 @@ LOG_NOISE_BOUNDS = (-10.0, 2.0)
 
 PAD_BUCKET = 32
 _FAR = 1e6          # padded pseudo-points live this far away (kernel → 0)
+
+
+def pad_bucket_for(n: int, pad: int) -> int:
+    """Smallest pad bucket (multiple of ``pad``) holding ``n`` training
+    points; ``pad=0`` disables bucketing.  THE bucketing rule for GP
+    training sets — ``fit_gp``, the fused ask pipeline, and the
+    benchmarks must all agree on it or the bit-identity and
+    compile-count guarantees break."""
+    return ((n + pad - 1) // pad) * pad if pad else n
 
 
 def _pack(p: KernelParams) -> Array:
@@ -42,6 +51,12 @@ def _unpack(theta: Array, dim: int) -> KernelParams:
                         log_noise=theta[dim + 1])
 
 
+# public names for the packed-θ representation (the fused ask pipeline
+# carries θ across trials as a flat vector)
+pack_theta = _pack
+unpack_theta = _unpack
+
+
 def _neg_map_objective(theta: Array, x: Array, y: Array, valid: Array,
                        dim: int, kernel: str) -> Array:
     p = _unpack(theta, dim)
@@ -53,9 +68,14 @@ def _neg_map_objective(theta: Array, x: Array, y: Array, valid: Array,
     return -(lml + prior)
 
 
-@functools.partial(jax.jit, static_argnames=("dim", "kernel", "opts"))
-def _fit_padded(x, y, valid, thetas, lower, upper, *, dim: int,
-                kernel: str, opts: LbfgsbOptions):
+def fit_padded_core(x, y, valid, thetas, lower, upper, *, dim: int,
+                    kernel: str, opts: LbfgsbOptions):
+    """Unjitted multi-start MAP fit on a padded/masked training set.
+
+    Exposed (in addition to the jitted module-level wrapper below) so the
+    fused ask program (`engine/ask.py`) can inline the exact same fit into
+    its one-program suggest pipeline.
+    """
     def single(theta):
         return _neg_map_objective(theta, x, y, valid, dim, kernel)
 
@@ -70,6 +90,43 @@ def _fit_padded(x, y, valid, thetas, lower, upper, *, dim: int,
     L = jnp.linalg.cholesky(K)
     alpha = cho_solve((L, True), y * v)
     return theta_best, L, alpha, res.k
+
+
+_fit_padded = jax.jit(fit_padded_core,
+                      static_argnames=("dim", "kernel", "opts"))
+
+
+def theta_bounds(dim: int, dtype) -> Tuple[Array, Array]:
+    """(lower, upper) box bounds on the packed log-hyperparameters (P,)."""
+    lower = jnp.concatenate([
+        jnp.full((dim,), LOG_LS_BOUNDS[0], dtype),
+        jnp.asarray([LOG_AMP_BOUNDS[0]], dtype),
+        jnp.asarray([LOG_NOISE_BOUNDS[0]], dtype)])
+    upper = jnp.concatenate([
+        jnp.full((dim,), LOG_LS_BOUNDS[1], dtype),
+        jnp.asarray([LOG_AMP_BOUNDS[1]], dtype),
+        jnp.asarray([LOG_NOISE_BOUNDS[1]], dtype)])
+    return lower, upper
+
+
+def theta_init_grid(dim: int, dtype, n_restarts: int, seed: int,
+                    init: Optional[KernelParams] = None) -> Array:
+    """(n_restarts, P) multi-start θ inits — fit_gp's exact construction,
+    exposed so the fused ask path reproduces the unfused fit bit-for-bit
+    (same seed ⇒ same jitter draws ⇒ same starting simplex)."""
+    base = init if init is not None else KernelParams(
+        log_lengthscale=jnp.zeros((dim,), dtype),
+        log_amplitude=jnp.zeros((), dtype),
+        log_noise=jnp.asarray(-4.0, dtype))
+    theta0 = _pack(base)
+    P = theta0.shape[0]
+    key = jax.random.PRNGKey(seed)
+    jitter0 = jax.random.uniform(key, (max(n_restarts - 1, 0), P), dtype,
+                                 minval=-1.0, maxval=1.0)
+    return jnp.concatenate([theta0[None], theta0[None] + jitter0], 0)
+
+
+FIT_OPTS = LbfgsbOptions(m=10, maxiter=60, pgtol=1e-5, ftol=1e-12)
 
 
 def fit_gp(
@@ -92,7 +149,7 @@ def fit_gp(
     n, dim = x.shape
     dt = x.dtype
 
-    n_pad = (-n) % pad_bucket if pad_bucket else 0
+    n_pad = pad_bucket_for(n, pad_bucket) - n
     if n_pad:
         far = jnp.full((n_pad, dim), _FAR, dt) + \
             jnp.arange(n_pad, dtype=dt)[:, None]
@@ -100,28 +157,10 @@ def fit_gp(
         y = jnp.concatenate([y, jnp.zeros((n_pad,), dt)], 0)
     valid = (jnp.arange(n + n_pad) < n)
 
-    base = init if init is not None else KernelParams(
-        log_lengthscale=jnp.zeros((dim,), dt),
-        log_amplitude=jnp.zeros((), dt),
-        log_noise=jnp.asarray(-4.0, dt))
-    theta0 = _pack(base)
-    P = theta0.shape[0]
+    thetas = theta_init_grid(dim, dt, n_restarts, seed, init=init)
+    lower, upper = theta_bounds(dim, dt)
 
-    key = jax.random.PRNGKey(seed)
-    jitter0 = jax.random.uniform(key, (max(n_restarts - 1, 0), P), dt,
-                                 minval=-1.0, maxval=1.0)
-    thetas = jnp.concatenate([theta0[None], theta0[None] + jitter0], 0)
-
-    lower = jnp.concatenate([
-        jnp.full((dim,), LOG_LS_BOUNDS[0], dt),
-        jnp.asarray([LOG_AMP_BOUNDS[0]], dt),
-        jnp.asarray([LOG_NOISE_BOUNDS[0]], dt)])
-    upper = jnp.concatenate([
-        jnp.full((dim,), LOG_LS_BOUNDS[1], dt),
-        jnp.asarray([LOG_AMP_BOUNDS[1]], dt),
-        jnp.asarray([LOG_NOISE_BOUNDS[1]], dt)])
-
-    opts = LbfgsbOptions(m=10, maxiter=maxiter, pgtol=1e-5, ftol=1e-12)
+    opts = FIT_OPTS._replace(maxiter=maxiter)
     theta_best, L, alpha, _ = _fit_padded(
         x, y, valid, thetas,
         jnp.broadcast_to(lower, thetas.shape),
@@ -137,3 +176,58 @@ def standardize(y: Array) -> Tuple[Array, Array, Array]:
     mu = jnp.mean(y)
     sd = jnp.maximum(jnp.std(y), 1e-10)
     return (y - mu) / sd, mu, sd
+
+
+def standardize_masked(y: Array, valid: Array) -> Tuple[Array, Array, Array]:
+    """Masked :func:`standardize` over a padded target vector.
+
+    Moments use only ``valid`` entries; padded slots come back exactly 0
+    (the padded-fit convention).  Matches ``standardize`` on the valid
+    subset, which keeps the fused ask program's fit input identical to
+    the host pipeline's ``concat(standardize(y), zeros)``.
+    """
+    v = valid.astype(y.dtype)
+    n = jnp.sum(v)
+    mu = jnp.sum(y * v) / n
+    sd = jnp.maximum(jnp.sqrt(jnp.sum((y - mu) ** 2 * v) / n), 1e-10)
+    return jnp.where(valid, (y - mu) / sd, 0.0), mu, sd
+
+
+def incremental_update(
+    x: Array,
+    y_std: Array,
+    n_valid: Array,
+    params: KernelParams,
+    chol: Array,
+    kinv: Optional[Array] = None,
+    *,
+    kernel: str = "matern52",
+    jitter: float = 1e-8,
+) -> Tuple[Array, Array, Optional[Array], Array]:
+    """O(n²) trial-to-trial GP refit: fixed θ, one appended observation.
+
+    ``chol`` (and optionally ``kinv``) describe the previous trial's
+    padded fit over the first ``n_valid − 1`` rows of ``x``; the new
+    observation sits at row ``n_valid − 1`` (inside the same pad bucket).
+    Rank-one-updates the Cholesky factor / K⁻¹ and re-solves α for the
+    (re-standardized) targets — everything O(n²), no Cholesky
+    refactorization, no MAP optimization.
+
+    Returns ``(chol, alpha, kinv, ok)``.  ``ok=False`` flags a
+    numerically impossible Schur complement (duplicate point at zero
+    noise, θ drifted badly): callers must then fall back to a full refit.
+    """
+    b = x.shape[0]
+    idx = n_valid - 1
+    dt = x.dtype
+    valid_old = (jnp.arange(b) < idx).astype(dt)
+    x_new = x[idx]
+    k_col = KERNELS[kernel](x_new[None], x, params)[0] * valid_old
+    k_diag = params.amplitude + params.noise + jitter
+    chol_new, s = cholesky_update(chol, k_col, k_diag, idx)
+    ok = jnp.isfinite(s) & (s > 1e-12 * k_diag)
+    # y re-standardizes every trial (mean/std shift), so α is fresh either
+    # way — but cho_solve on the updated factor is O(n²), not O(n³)
+    alpha = cho_solve((chol_new, True), y_std)
+    kinv_new = None if kinv is None else kinv_update(kinv, k_col, s, idx)
+    return chol_new, alpha, kinv_new, ok

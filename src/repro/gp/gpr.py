@@ -76,6 +76,56 @@ def with_kinv(gp: GPState) -> GPState:
                    kinv=kinv)
 
 
+def cholesky_update(chol: Array, k_col: Array, k_diag: Array,
+                    idx: Array) -> Tuple[Array, Array]:
+    """Rank-one *append* update of a padded Cholesky factor — O(n²).
+
+    ``chol`` is the (b, b) lower factor of ``blockdiag(K_n, I_pad)`` (the
+    padded-fit layout: identity rows for pad slots).  A new observation
+    enters at row ``idx`` (== n, the first pad slot); ``k_col`` is its
+    masked cross-covariance against the b rows (zero at slots ≥ idx) and
+    ``k_diag`` its prior variance + noise + jitter.  The bordered update
+
+        l₁₂ = L⁻¹ k,   l₂₂ = √(k_diag − ‖l₁₂‖²)
+
+    replaces the identity row at ``idx`` in place, so the result is again
+    blockdiag-padded — no O(n³) refactorization.  ``idx`` may be traced
+    (the fused ask program calls this with a dynamic observation count).
+
+    Returns ``(chol_new, s)`` with ``s = k_diag − ‖l₁₂‖²`` the Schur
+    complement: ``s ≤ 0`` (numerically impossible K) signals the caller
+    to fall back to a full refit.
+    """
+    z = solve_triangular(chol, k_col, lower=True)
+    s = k_diag - jnp.dot(z, z)
+    l22 = jnp.sqrt(jnp.maximum(s, 1e-300))
+    e = jax.nn.one_hot(idx, chol.shape[0], dtype=chol.dtype)
+    # z is zero at idx (masked k_col ⇒ identity block solves to 0), so the
+    # new row is z with l22 dropped onto the diagonal
+    row = z + l22 * e
+    chol_new = chol * (1.0 - e)[:, None] + e[:, None] * row[None, :]
+    return chol_new, s
+
+
+def kinv_update(kinv: Array, k_col: Array, s: Array, idx: Array) -> Array:
+    """Bordered-inverse append matching :func:`cholesky_update` — O(n²).
+
+    With ``w = K⁻¹k`` (padded: zero at slots ≥ idx) and Schur complement
+    ``s``, the blockwise inverse of the grown matrix is
+
+        [[K⁻¹ + wwᵀ/s,  −w/s],
+         [−wᵀ/s,          1/s]]
+
+    which, in the padded layout (identity at pad slots, including the old
+    entry at ``idx``), collapses to one symmetric rank-one correction:
+    ``K⁻¹ + (w−e)(w−e)ᵀ/s − eeᵀ``.
+    """
+    w = kinv @ k_col
+    e = jax.nn.one_hot(idx, kinv.shape[0], dtype=kinv.dtype)
+    t = w - e
+    return kinv + jnp.outer(t, t) / s - jnp.outer(e, e)
+
+
 def predict(gp: GPState, x_query: Array) -> Tuple[Array, Array]:
     """Posterior mean and variance at (q, D) query points → ((q,), (q,)).
 

@@ -1,0 +1,196 @@
+"""Fused device-resident ask() tests: incremental-refit exactness (vs a
+from-scratch fit), fused-vs-host trajectory equality, compile economy,
+and the controller's failure reporting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.bo.sampler import GPSampler
+from repro.bo.space import BoxSpace
+from repro.core.acquisition import logei_acq
+from repro.core.mso import MsoOptions
+from repro.engine import AskConfig, AskEngine, EvalEngine
+from repro.gp.fit import _FAR, incremental_update, standardize_masked
+from repro.gp.gpr import GPState, fit_gram, predict
+from repro.gp.kernels import init_params
+
+
+def _sphere(x):
+    return float(np.sum((x - 0.4) ** 2))
+
+
+def _sampler(fused, *, seed=3, refit_interval=8, warm_start=True,
+             pad=16, backend="auto"):
+    return GPSampler(BoxSpace.cube(3, -1.0, 1.0), strategy="dbe_vec",
+                     seed=seed, n_startup_trials=5, n_restarts=6,
+                     fused=fused, refit_interval=refit_interval,
+                     warm_start=warm_start, pad_multiple=pad,
+                     posterior_backend=backend,
+                     mso_options=MsoOptions(maxiter=60, pgtol=1e-2))
+
+
+# ------------------------------------------------------ incremental refit
+def test_incremental_update_matches_from_scratch():
+    """Rank-one Cholesky/K⁻¹ append == full refactorization to ≤1e-8,
+    growing one observation at a time through a padded buffer."""
+    rng = np.random.default_rng(0)
+    b, D, n0 = 24, 3, 7
+    p = init_params(D)
+    X = rng.uniform(0, 1, (b, D))
+    yv = np.sin(4 * X).sum(1)
+    x = jnp.full((b, D), _FAR) + jnp.arange(b, dtype=jnp.float64)[:, None]
+
+    def scratch(n):
+        """From-scratch padded factorization at fixed θ (gram + mask)."""
+        from jax.scipy.linalg import cho_solve
+        from repro.gp.kernels import gram
+        v = (jnp.arange(b) < n).astype(jnp.float64)
+        K = gram(x, p, "matern52")
+        K = K * (v[:, None] * v[None, :]) + jnp.diag(1.0 - v)
+        L = jnp.linalg.cholesky(K)
+        ys, _, _ = standardize_masked(y * v, jnp.arange(b) < n)
+        return L, cho_solve((L, True), ys), cho_solve((L, True), jnp.eye(b))
+
+    x = x.at[:n0].set(jnp.asarray(X[:n0]))
+    y = jnp.zeros(b).at[:n0].set(jnp.asarray(yv[:n0]))
+    chol, _, kinv = scratch(n0)
+    for n in range(n0 + 1, b + 1):
+        x = x.at[n - 1].set(jnp.asarray(X[n - 1]))
+        y = y.at[n - 1].set(float(yv[n - 1]))
+        ys, _, _ = standardize_masked(y, jnp.arange(b) < n)
+        chol, alpha, kinv, ok = incremental_update(
+            x, ys, jnp.asarray(n), p, chol, kinv)
+        assert bool(ok), n
+        L_ref, a_ref, k_ref = scratch(n)
+        np.testing.assert_allclose(np.asarray(chol), np.asarray(L_ref),
+                                   atol=1e-8)
+        np.testing.assert_allclose(np.asarray(alpha), np.asarray(a_ref),
+                                   atol=1e-8)
+        np.testing.assert_allclose(np.asarray(kinv), np.asarray(k_ref),
+                                   atol=1e-8)
+
+
+def test_incremental_ask_posterior_matches_full_across_buckets():
+    """Driving the AskEngine across bucket boundaries, every incremental
+    trial's GP state reproduces a from-scratch fit (same θ) to ≤1e-8."""
+    rng = np.random.default_rng(1)
+    D = 3
+    cfg = AskConfig(dim=D, n_restarts=4, pad_bucket=8, refit_interval=6,
+                    backend="pallas_interpret")   # exercises the kinv path
+    ask = AskEngine(EvalEngine(logei_acq), cfg)
+    for i in range(5):
+        xi = rng.uniform(0, 1, D)
+        ask.observe(xi, _sphere(xi))
+
+    checked = 0
+    for t in range(16):                       # crosses 8- and 16-buckets
+        key = jax.random.fold_in(jax.random.PRNGKey(0), t)
+        bx, info = ask.suggest(key, fit_seed=t)
+        if info.kind == "incremental":
+            gp = ask.gp_state()
+            n = ask.n_obs
+            ref = fit_gram(gp.x_train[:n], gp.y_train[:n], gp.params)
+            Xq = jnp.asarray(rng.uniform(0, 1, (9, D)))
+            m_inc, v_inc = predict(gp, Xq)
+            m_ref, v_ref = predict(ref, Xq)
+            np.testing.assert_allclose(np.asarray(m_inc),
+                                       np.asarray(m_ref), atol=1e-8)
+            np.testing.assert_allclose(np.asarray(v_inc),
+                                       np.asarray(v_ref), atol=1e-8)
+            checked += 1
+        xn = np.clip(bx, 0, 1)
+        ask.observe(xn, _sphere(xn))
+    assert checked >= 8                       # incremental trials dominated
+    assert ask.n_full_refits >= 3             # boundary + interval refits
+
+
+# ------------------------------------------------- fused == host pipeline
+def test_fused_reproduces_unfused_trajectory_bitwise():
+    """With incremental updates disabled (refit_interval=1, no warm
+    start), the one-program fused ask() must reproduce the host dbe_vec
+    pipeline's suggestions bit-for-bit across a bucket boundary."""
+    n_trials = 18
+    sa, sb = _sampler(False, refit_interval=1, warm_start=False), \
+        _sampler(True, refit_interval=1, warm_start=False)
+    for i in range(n_trials):
+        ta, tb = sa.ask(), sb.ask()
+        np.testing.assert_array_equal(ta.x, tb.x, err_msg=f"trial {i}")
+        sa.tell(ta.trial_id, _sphere(ta.x))
+        sb.tell(tb.trial_id, _sphere(tb.x))
+    assert sb._ask.n_incremental == 0
+    assert sb._ask.n_full_refits == n_trials - 5
+
+
+def test_fused_default_quality_with_incremental():
+    """Default fused config (incremental updates on, warm-started refits)
+    still optimizes: sanity guard that speed didn't cost convergence."""
+    s = _sampler(True)
+    best = s.optimize(_sphere, 24)
+    assert best.y < 0.25, best
+    snap = s._ask.stats_snapshot()
+    assert snap["n_incremental"] > snap["n_full_refits"]
+    assert snap["n_fallbacks"] == 0
+
+
+def test_fused_compile_counts_stay_o_buckets():
+    """30 trials crossing two bucket boundaries: at most one full + one
+    incremental trace per GP size bucket — O(#buckets), not O(trials)."""
+    s = _sampler(True, pad=8)
+    s.optimize(_sphere, 30)
+    ask = s._ask
+    n_buckets = 4                   # suggests span n=5..29 → pads 8..32
+    assert ask.bucket == 32
+    snap = ask.stats_snapshot()
+    assert snap["n_full_compiles"] <= n_buckets
+    assert snap["n_incr_compiles"] <= n_buckets
+    assert snap["n_full_refits"] + snap["n_incremental"] == 30 - 5
+
+
+def test_fused_handles_out_of_order_tell():
+    """Two pending asks completed in reverse order must not duplicate or
+    drop observations in the fused GP (sync is keyed by trial id)."""
+    s = _sampler(True, seed=9)
+    for _ in range(5):
+        t = s.ask()
+        s.tell(t.trial_id, _sphere(t.x))
+    t1, t2 = s.ask(), s.ask()              # two pending suggestions
+    s.tell(t2.trial_id, _sphere(t2.x))     # ...completed out of order
+    s.tell(t1.trial_id, _sphere(t1.x))
+    for _ in range(3):
+        t = s.ask()
+        s.tell(t.trial_id, _sphere(t.x))
+    s.ask()                                # final sync into the ask GP
+    ask = s._ask
+    assert ask.n_obs == 10                 # 5 startup + 2 + 3, no dupes
+    done_y = sorted(t.y for t in s.trials if t.state == "complete")
+    gp_y = sorted(np.asarray(ask._y[:ask.n_obs]).tolist())
+    np.testing.assert_allclose(gp_y, done_y, atol=0)
+
+
+def test_fused_requires_dbe_vec():
+    with pytest.raises(ValueError):
+        GPSampler(BoxSpace.cube(2, 0.0, 1.0), strategy="dbe", fused=True)
+
+
+# ------------------------------------------------- controller error paths
+def test_best_without_completed_trials_raises_clear_error():
+    s = _sampler(True)
+    with pytest.raises(RuntimeError, match="no completed trials"):
+        s.best()
+    t = s.ask()
+    s.tell(t.trial_id, 0.0, failed=True, error="ValueError: boom")
+    with pytest.raises(RuntimeError, match="boom"):
+        s.best()
+
+
+def test_optimize_preserves_failure_reason():
+    s = _sampler(True)
+
+    def exploding(x):
+        raise ValueError("objective exploded at x=...")
+
+    with pytest.raises(RuntimeError, match="objective exploded"):
+        s.optimize(exploding, 3)
+    assert all(t.state == "failed" for t in s.trials)
+    assert all("ValueError" in t.error for t in s.trials)

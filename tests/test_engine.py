@@ -109,6 +109,22 @@ def test_lockstep_shares_engine_and_compiles_once():
     np.testing.assert_allclose(res.best_x, 0.5, atol=1e-5)
 
 
+def test_lockstep_surfaces_eval_economy_in_stats():
+    """dbe_vec rounds/evals land in EngineStats (and thus BENCH rows):
+    the fastest strategy must not report 0 evaluation work."""
+    eng = EvalEngine(sphere_acq)
+    x0 = np.random.default_rng(13).uniform(0, 1, (6, 3))
+    res = maximize_acqf(sphere_acq, x0, 0.0, 1.0, strategy="dbe_vec",
+                        options=MsoOptions(maxiter=50, pgtol=1e-8),
+                        engine=eng)
+    es = res.engine_stats
+    assert es["n_rounds"] == res.n_rounds > 0
+    assert es["n_points"] == int(np.sum(res.n_evals)) > 0
+    # frozen-row evaluations are the lockstep analogue of padding waste
+    assert es["n_padded"] == res.n_rounds * 6 - es["n_points"] >= 0
+    assert es["bucket_rounds"].get(6) == res.n_rounds
+
+
 # ------------------------------------------------ shrinking active set
 def test_dbe_batch_sizes_non_increasing():
     """Converged restarts leave and never re-join: the evaluation batch
