@@ -1,0 +1,267 @@
+"""Fleet ask throughput: S concurrent studies through one fleet plane vs
+a loop of single-study fused AskEngines.
+
+For each fleet size S the same trial schedule runs twice:
+
+* **loop** — S independent `GPSampler(fused=True)` studies served one
+  `ask()` at a time (the PR-2 pipeline: already one compiled program per
+  suggest, but the device sees B≈10 restarts at a time and every study
+  carries its OWN jitted programs — compile cost is O(S · #buckets));
+* **fleet** — the same S studies through ONE `FleetSampler`: every
+  round, all suggest requests batch into one `fleet.step()` running the
+  stacked (S, B, D) programs per slot block; blocks of equal (bucket,
+  slots) shape share executables, so compile cost is O(#buckets),
+  independent of S.
+
+Two throughput numbers per run:
+
+* **aggregate** (the headline serving metric): S·rounds / total wall
+  over ALL post-startup suggest rounds — XLA traces included, because
+  admitting a study into the fleet is free while admitting one to the
+  loop compiles fresh per-study programs.  This is where the fleet's
+  compile economy turns into wall-clock at scale.
+* **steady** (the per-trial metric): S / median(round wall) over rounds
+  where every study took the incremental O(n²) program and nothing
+  traced — PR 2's steady-state definition lifted to the fleet.  On CPU
+  the lockstep fleet pays max-study rounds here and roughly breaks even
+  with the loop; on wide-vector backends the stacked programs win both.
+
+--check-compiles asserts fleet compile counts ≤ 3 per (bucket, slots)
+shape and independent of S, and (xla, S=16 in the sweep) the ≥4×
+aggregate speedup acceptance target.  The pallas_interpret backend runs
+for correctness/compile accounting only — interpreter-mode emulation of
+the vmapped posterior kernel is python-speed, so its wall-clock rows
+are not a performance signal.
+
+Emits BENCH_fleet.json.
+
+Usage:
+  python benchmarks/fleet_throughput.py [--tiny] [--rounds N]
+      [--fleet-sizes 1 4 16 64] [--slots K]
+      [--backends xla pallas_interpret ...] [--check-compiles]
+      [--out BENCH_fleet.json]
+"""
+import argparse
+import json
+import platform
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np                                     # noqa: E402
+
+from repro.bo.objectives import make_objective         # noqa: E402
+from repro.bo.sampler import FleetSampler, GPSampler   # noqa: E402
+from repro.bo.space import BoxSpace                    # noqa: E402
+from repro.core.mso import MsoOptions                  # noqa: E402
+
+SPEEDUP_TARGET_S = 16       # acceptance: >=4x aggregate at S=16 (xla CPU)
+SPEEDUP_TARGET = 4.0
+
+
+def _objectives(S, D, seed=0):
+    return [make_objective("sphere", D, seed=seed + i) for i in range(S)]
+
+
+def _sampler_kw(args, backend):
+    return dict(n_startup_trials=args.n_startup, n_restarts=args.B,
+                pad_multiple=args.pad, posterior_backend=backend,
+                refit_interval=args.refit_interval,
+                mso_options=MsoOptions())
+
+
+def run_loop(S, backend, args):
+    """Baseline: S independent fused AskEngine studies, asked in a loop."""
+    objs = _objectives(S, args.D)
+    samplers = [GPSampler(BoxSpace.cube(args.D, *objs[i].bounds),
+                          strategy="dbe_vec", fused=True, seed=i,
+                          **_sampler_kw(args, backend))
+                for i in range(S)]
+
+    def compiles():
+        return sum(s._ask.stats_snapshot()["n_ask_compiles"]
+                   for s in samplers if s._ask is not None)
+
+    round_ms, steady = [], []
+    for r in range(args.rounds):
+        c0 = compiles()
+        t0 = time.perf_counter()
+        trials = [s.ask() for s in samplers]
+        wall = time.perf_counter() - t0
+        kinds = [s.last_ask_info.kind if s.last_ask_info is not None
+                 else "startup" for s in samplers]
+        round_ms.append(1e3 * wall)
+        steady.append(all(k == "incremental" for k in kinds)
+                      and compiles() == c0)
+        for s, t, obj in zip(samplers, trials, objs):
+            s.tell(t.trial_id, obj(t.x))
+    return round_ms, steady, {"n_compiles_total": compiles()}
+
+
+def run_fleet(S, backend, args):
+    """One FleetSampler serving all S studies per round."""
+    objs = _objectives(S, args.D)
+    fs = FleetSampler([BoxSpace.cube(args.D, *o.bounds) for o in objs],
+                      seed=0, slots=min(args.slots, S),
+                      **_sampler_kw(args, backend))
+    round_ms, steady = [], []
+    for r in range(args.rounds):
+        c0 = fs.stats_snapshot()["n_fleet_compiles"]
+        t0 = time.perf_counter()
+        trials = fs.ask_all()
+        wall = time.perf_counter() - t0
+        kinds = [s.last_ask_info.kind if s.last_ask_info is not None
+                 else "startup" for s in fs.samplers]
+        round_ms.append(1e3 * wall)
+        steady.append(all(k == "incremental" for k in kinds)
+                      and fs.stats_snapshot()["n_fleet_compiles"] == c0)
+        for i, (t, obj) in enumerate(zip(trials, objs)):
+            fs.tell(i, t.trial_id, obj(t.x))
+    snap = fs.stats_snapshot()
+    n_buckets = len({blk.bucket for blk in fs.fleet._blocks})
+    return round_ms, steady, {
+        "n_buckets": n_buckets,
+        "n_blocks": snap["n_blocks"],
+        "n_compiles_total": snap["n_fleet_compiles"],
+        "n_full_refits": snap["n_full_refits"],
+        "n_incremental": snap["n_incremental"],
+        "n_fallbacks": snap["n_fallbacks"],
+        "n_migrations": snap["n_migrations"],
+    }
+
+
+def _throughputs(S, round_ms, steady, n_startup):
+    """(aggregate sps over all post-startup rounds incl. traces,
+    steady-state sps, #steady rounds)."""
+    post = round_ms[n_startup:]
+    agg = S * len(post) / (sum(post) / 1e3) if post else None
+    sm = [m for m, keep in zip(round_ms, steady) if keep]
+    sps = S / (float(np.median(sm)) / 1e3) if sm else None
+    return agg, sps, len(sm)
+
+
+def bench_backend(backend, sizes, args):
+    rows = []
+    fleet_compiles = {}
+    for S in sizes:
+        res = {}
+        for mode, runner in (("loop", run_loop), ("fleet", run_fleet)):
+            round_ms, steady, extra = runner(S, backend, args)
+            agg, sps, n_steady = _throughputs(S, round_ms, steady,
+                                              args.n_startup)
+            row = {
+                "backend": backend, "mode": mode, "S": S,
+                "rounds": args.rounds, "D": args.D, "B": args.B,
+                "pad": args.pad, "slots": min(args.slots, S),
+                "refit_interval": args.refit_interval,
+                "n_startup": args.n_startup,
+                "round_ms": [round(m, 3) for m in round_ms],
+                "suggests_per_sec_aggregate": agg,
+                "suggests_per_sec_steady": sps,
+                "n_steady_rounds": n_steady,
+                **extra,
+            }
+            rows.append(row)
+            res[mode] = row
+            sps_s = f"{sps:.2f}/s" if sps else "n/a"
+            agg_s = f"{agg:.2f}/s" if agg else "n/a"
+            print(f"fleet_bench,{backend},S={S},{mode},"
+                  f"aggregate={agg_s},steady={sps_s},"
+                  f"compiles={extra['n_compiles_total']}", flush=True)
+        lo, fl = res["loop"], res["fleet"]
+        speed = None            # rounds <= n_startup: nothing to compare
+        if lo["suggests_per_sec_aggregate"] and \
+                fl["suggests_per_sec_aggregate"]:
+            speed = (fl["suggests_per_sec_aggregate"]
+                     / lo["suggests_per_sec_aggregate"])
+        speed_steady = None
+        if lo["suggests_per_sec_steady"] and fl["suggests_per_sec_steady"]:
+            speed_steady = (fl["suggests_per_sec_steady"]
+                            / lo["suggests_per_sec_steady"])
+        print(f"fleet_bench,{backend},S={S},speedup_aggregate="
+              f"{speed if speed else float('nan'):.2f}x,speedup_steady="
+              f"{speed_steady if speed_steady else float('nan'):.2f}x",
+              flush=True)
+        rows.append({"backend": backend, "S": S, "summary": True,
+                     "speedup_aggregate": speed,
+                     "speedup_steady": speed_steady})
+        fleet_compiles[S] = (fl["n_compiles_total"], fl["n_buckets"])
+
+    if args.check_compiles:
+        for S, (compiles, n_buckets) in fleet_compiles.items():
+            assert compiles <= 3 * n_buckets, \
+                f"S={S}: {compiles} fleet traces for {n_buckets} buckets " \
+                f"(must be <= 3/bucket)"
+        if len(fleet_compiles) > 1:
+            vals = set(fleet_compiles.values())
+            assert len(vals) == 1, \
+                f"fleet compile counts vary with S: {fleet_compiles}"
+        print(f"fleet_bench,{backend},compile check OK {fleet_compiles}",
+              flush=True)
+        if SPEEDUP_TARGET_S in sizes and backend == "xla":
+            sp = [r["speedup_aggregate"] for r in rows
+                  if r.get("summary") and r["S"] == SPEEDUP_TARGET_S][0]
+            assert sp is not None and sp >= SPEEDUP_TARGET, \
+                f"S={SPEEDUP_TARGET_S} speedup {sp} < {SPEEDUP_TARGET}x"
+            print(f"fleet_bench,{backend},speedup check OK ({sp:.2f}x)",
+                  flush=True)
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: S=4, small GP buckets, xla only")
+    ap.add_argument("--rounds", type=int, default=None,
+                    help="ask/tell rounds per study (incl. startup)")
+    ap.add_argument("--fleet-sizes", type=int, nargs="+", default=None)
+    ap.add_argument("--slots", type=int, default=None)
+    ap.add_argument("--backends", nargs="+", default=None,
+                    choices=("xla", "pallas", "pallas_interpret"))
+    ap.add_argument("--check-compiles", action="store_true")
+    ap.add_argument("--out", default="BENCH_fleet.json")
+    args = ap.parse_args(argv)
+
+    if args.tiny:
+        args.rounds = args.rounds or 14
+        args.D, args.B, args.pad = 3, 4, 8
+        args.refit_interval, args.n_startup = 4, 4
+        args.slots = args.slots or 4
+        args.fleet_sizes = args.fleet_sizes or [4]
+        args.backends = args.backends or ["xla"]
+    else:
+        args.rounds = args.rounds or 34
+        args.D, args.B, args.pad = 6, 10, 32
+        args.refit_interval, args.n_startup = 8, 10
+        args.slots = args.slots or 16
+        args.fleet_sizes = args.fleet_sizes or [1, 4, 16, 64]
+        args.backends = args.backends or ["xla", "pallas_interpret"]
+
+    out = []
+    for backend in args.backends:
+        sizes = args.fleet_sizes
+        if backend != "xla":
+            # interpret-mode emulation is slow; cover the scaling story
+            # with the endpoints
+            sizes = [S for S in sizes if S <= SPEEDUP_TARGET_S]
+        out.extend(bench_backend(backend, sizes, args))
+
+    record = {
+        "bench": "fleet_throughput",
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "device": jax.devices()[0].device_kind,
+        "jax_backend": jax.default_backend(),
+        "python": platform.python_version(),
+        "mode": "tiny" if args.tiny else "default",
+        "rows": out,
+    }
+    with open(args.out, "w") as f:
+        json.dump(record, f, indent=1)
+    print(f"wrote {args.out} ({len(out)} rows)")
+    return out
+
+
+if __name__ == "__main__":
+    main()

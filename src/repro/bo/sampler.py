@@ -24,7 +24,7 @@ from __future__ import annotations
 import json
 import os
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional
 
 import jax
@@ -122,6 +122,8 @@ class GPSampler:
                         else fused_logei_acq(self.posterior_backend))
         self.engine = EvalEngine(self._acq_fn)
         self._ask: Optional[AskEngine] = None       # fused pipeline state
+        self._fleet = None                          # attached FleetEngine
+        self._fleet_sid = None                      # our study id in it
         self._observed_ids: set = set()             # trials in the ask GP
         self._base_key = jax.random.PRNGKey(seed)   # restart-point stream
         self.trials: List[Trial] = []
@@ -237,6 +239,8 @@ class GPSampler:
         return jax.random.fold_in(self._base_key, len(self.trials))
 
     def _suggest_fused(self) -> np.ndarray:
+        if self._fleet is not None:
+            return self._suggest_fleet()
         done = [t for t in self.trials if t.state == "complete"]
         if self._ask is None:
             o = self.mso_options
@@ -263,19 +267,98 @@ class GPSampler:
         best_x, info = ask.suggest(self._restart_key(),
                                    fit_seed=self.seed + len(self.trials))
         wall = time.perf_counter() - t0
+        return self._record_fused_suggest(
+            best_x, info, wall,
+            {**self.engine.stats_snapshot(), **ask.stats_snapshot()})
+
+    def _record_fused_suggest(self, best_x, info, wall, snapshot):
+        """Shared stats tail of the fused/fleet suggest paths.  Per-
+        restart state stays on device in both — only the suggestion (and
+        scalar diagnostics) ever reach the host."""
         if info.kind != "incremental":
             self.stats.n_gp_fits += 1
         self.stats.acqf_time += wall
         self.stats.acqf_iters.append(
             float(np.median(np.asarray(info.n_iters))))
         self.stats.acqf_rounds.append(int(info.rounds))
-        self.stats.engine = {**self.engine.stats_snapshot(),
-                             **ask.stats_snapshot()}
-        # per-restart state stays on device in the fused pipeline — only
-        # the suggestion (and scalar diagnostics) ever reach the host
+        self.stats.engine = snapshot
         self.last_mso = None
         self.last_ask_info = info
         return self.space.from_unit(np.clip(best_x, 0.0, 1.0))
+
+    # ------------------------------------------------------- fleet path
+    def attach_fleet(self, fleet, study_id=None) -> "GPSampler":
+        """Route this sampler's fused ask() through a shared
+        :class:`~repro.engine.fleet.FleetEngine` (one compiled program
+        serves every attached study's suggest).
+
+        Must be called before the first trial; the fleet's static config
+        must match this sampler's (dim, restarts, bucketing, backend) or
+        the stacked programs would not reproduce the solo pipeline.
+        Returns ``self`` for chaining.
+        """
+        if not self.fused:
+            raise ValueError("attach_fleet() requires the fused dbe_vec "
+                             "pipeline (strategy='dbe_vec', fused=True)")
+        if self.trials or self._ask is not None:
+            raise ValueError("attach_fleet() must be called before the "
+                             "first trial")
+        cfg = fleet.cfg
+        o = self.mso_options
+        mine = dict(dim=self.space.dim, n_restarts=self.B,
+                    pad_bucket=self.pad_multiple,
+                    backend=self.posterior_backend,
+                    refit_interval=self.refit_interval,
+                    warm_start=self.warm_start,
+                    gp_fit_restarts=self.gp_fit_restarts,
+                    mso=(o.m, o.maxiter, o.pgtol, o.ftol, o.maxls))
+        theirs = {k: getattr(cfg, k) for k in mine if k != "mso"}
+        theirs["mso"] = (cfg.mso.m, cfg.mso.maxiter, cfg.mso.pgtol,
+                         cfg.mso.ftol, cfg.mso.maxls)
+        if mine != theirs:
+            raise ValueError(f"fleet config mismatch: sampler has {mine}, "
+                             f"fleet has {theirs}")
+        sid = study_id if study_id is not None else f"study-{id(self):x}"
+        fleet.add_study(sid)
+        self._fleet, self._fleet_sid = fleet, sid
+        return self
+
+    def _sync_fleet_observations(self) -> None:
+        for t in self.trials:
+            if t.state == "complete" and t.trial_id not in self._observed_ids:
+                self._fleet.observe(self._fleet_sid,
+                                    self.space.to_unit(t.x), t.y)
+                self._observed_ids.add(t.trial_id)
+
+    def prefetch_suggest(self) -> bool:
+        """Enqueue this sampler's next suggest into the attached fleet
+        WITHOUT running it — the caller batches many studies' requests
+        into one ``fleet.step()`` and then calls ``ask()`` to collect.
+        Returns False while the sampler is still in random startup (no
+        request enqueued)."""
+        if self._fleet is None:
+            raise ValueError("no fleet attached")
+        n_done = sum(t.state == "complete" for t in self.trials)
+        if n_done < self.n_startup:
+            return False
+        self._sync_fleet_observations()
+        self._fleet.request_suggest(self._fleet_sid, self._restart_key(),
+                                    self.seed + len(self.trials))
+        return True
+
+    def _suggest_fleet(self) -> np.ndarray:
+        self._sync_fleet_observations()
+        t0 = time.perf_counter()
+        res = self._fleet.pop_result(self._fleet_sid)
+        if res is None:       # solo path: request + step + collect now
+            res = self._fleet.suggest(self._fleet_sid, self._restart_key(),
+                                      self.seed + len(self.trials))
+        best_x, info = res
+        wall = time.perf_counter() - t0
+        return self._record_fused_suggest(
+            best_x, info, wall,
+            {**self._fleet.engine.stats_snapshot(),
+             **self._fleet.stats_snapshot()})
 
     # ------------------------------------------------- journal (restart)
     def save(self, path: str):
@@ -311,3 +394,106 @@ class GPSampler:
                 t.error = "trial never completed (crash/preemption)"
             s.trials.append(t)
         return s
+
+
+class FleetSampler:
+    """Drive S concurrent BO studies through ONE fleet ask plane.
+
+    One :class:`~repro.engine.fleet.FleetEngine` (and one
+    :class:`~repro.engine.EvalEngine`) serves every study: each round,
+    all studies' suggest requests are enqueued (`prefetch_suggest`),
+    ONE ``fleet.step()`` runs the stacked device programs, and each
+    study's :class:`GPSampler` collects its suggestion from the shared
+    batch.  Per-study trajectories are bit-for-bit what the same sampler
+    would produce solo (same seeds ⇒ same PRNG streams; the fleet's
+    masking guarantees slot/batch independence).
+
+    ``spaces`` may be one :class:`BoxSpace` (replicated S times via
+    ``n_studies``) or an explicit list; every study shares the static
+    fleet config (dim, restarts, bucketing, backend).
+    """
+
+    def __init__(
+        self,
+        spaces,
+        *,
+        n_studies: Optional[int] = None,
+        seed: int = 0,
+        slots: int = 8,
+        strategy: str = "dbe_vec",
+        n_startup_trials: int = 10,
+        n_restarts: int = 10,
+        mso_options: Optional[MsoOptions] = None,
+        pad_multiple: int = 32,
+        gp_fit_restarts: int = 2,
+        posterior_backend: str = "auto",
+        refit_interval: int = 8,
+        warm_start: bool = True,
+    ):
+        from repro.engine import FleetConfig, FleetEngine
+        from repro.core.lbfgsb import LbfgsbOptions
+
+        if strategy != "dbe_vec":
+            raise ValueError("FleetSampler requires strategy='dbe_vec'")
+        if isinstance(spaces, BoxSpace):
+            spaces = [spaces] * int(n_studies if n_studies else 1)
+        dims = {sp.dim for sp in spaces}
+        if len(dims) != 1:
+            raise ValueError(f"all studies must share one dim, got {dims}")
+        backend = resolve_backend(posterior_backend)
+        o = mso_options if mso_options is not None else MsoOptions()
+        acq = logei_acq if backend == "xla" else fused_logei_acq(backend)
+        self.engine = EvalEngine(acq)
+        self.fleet = FleetEngine(self.engine, FleetConfig(
+            dim=dims.pop(), n_restarts=n_restarts, slots=slots,
+            backend=backend, pad_bucket=pad_multiple,
+            refit_interval=refit_interval, warm_start=warm_start,
+            gp_fit_restarts=gp_fit_restarts,
+            mso=LbfgsbOptions(m=o.m, maxiter=o.maxiter, pgtol=o.pgtol,
+                              ftol=o.ftol, maxls=o.maxls)))
+        self.samplers = [
+            GPSampler(sp, strategy="dbe_vec", fused=True, seed=seed + i,
+                      n_startup_trials=n_startup_trials,
+                      n_restarts=n_restarts, mso_options=replace(o),
+                      pad_multiple=pad_multiple,
+                      gp_fit_restarts=gp_fit_restarts,
+                      posterior_backend=backend,
+                      refit_interval=refit_interval,
+                      warm_start=warm_start,
+                      ).attach_fleet(self.fleet, study_id=i)
+            for i, sp in enumerate(spaces)]
+
+    def __len__(self) -> int:
+        return len(self.samplers)
+
+    def ask_all(self) -> List[Trial]:
+        """One fleet trial boundary: enqueue every study's suggest, run
+        ONE batched step, collect per-study trials (startup studies
+        sample randomly and skip the batch)."""
+        for s in self.samplers:
+            s.prefetch_suggest()
+        self.fleet.step()
+        return [s.ask() for s in self.samplers]
+
+    def tell(self, study: int, trial_id: int, y: float, **kw) -> None:
+        self.samplers[study].tell(trial_id, y, **kw)
+
+    def optimize(self, objectives, n_rounds: int) -> List[Trial]:
+        """Run ``n_rounds`` synchronized ask/tell rounds; ``objectives``
+        is one callable (shared) or one per study.  Returns per-study
+        best trials."""
+        if callable(objectives):
+            objectives = [objectives] * len(self.samplers)
+        for _ in range(n_rounds):
+            trials = self.ask_all()
+            for s, (smp, t) in enumerate(zip(self.samplers, trials)):
+                try:
+                    smp.tell(t.trial_id, objectives[s](t.x))
+                except Exception as e:   # noqa: BLE001 — trial isolation
+                    smp.tell(t.trial_id, 0.0, failed=True,
+                             error=f"{type(e).__name__}: {e}")
+        return [s.best() for s in self.samplers]
+
+    def stats_snapshot(self) -> dict:
+        return {**self.engine.stats_snapshot(),
+                **self.fleet.stats_snapshot()}

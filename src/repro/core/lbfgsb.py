@@ -315,26 +315,9 @@ def _step(fun_batched, lower, upper, opts: LbfgsbOptions,
     )
 
 
-def lbfgsb_minimize(
-    fun_batched: Callable[[Array], Tuple[Array, Array]],
-    x0: Array,
-    lower: Array,
-    upper: Array,
-    options: LbfgsbOptions = LbfgsbOptions(),
-) -> LbfgsbResult:
-    """Minimize ``B`` independent D-dimensional problems in lockstep.
-
-    Args:
-      fun_batched: maps ``(B, D)`` → ``((B,) values, (B, D) grads)``.
-        One call == one *batched evaluation round* in the paper's sense.
-      x0: ``(B, D)`` initial points.
-      lower/upper: broadcastable to ``(B, D)`` box bounds (±inf allowed).
-    """
-    if x0.ndim != 2:
-        raise ValueError(f"x0 must be (B, D), got {x0.shape}")
-    lower = jnp.broadcast_to(jnp.asarray(lower, x0.dtype), x0.shape)
-    upper = jnp.broadcast_to(jnp.asarray(upper, x0.dtype), x0.shape)
-
+def _minimize_2d(fun_batched, x0, lower, upper,
+                 options: LbfgsbOptions) -> LbfgsbResult:
+    """The core (B, D) lockstep solve (see :func:`lbfgsb_minimize`)."""
     state = _init_state(fun_batched, x0, lower, upper, options)
     state = _check_initial_convergence(state, lower, upper, options)
 
@@ -344,6 +327,54 @@ def lbfgsb_minimize(
     return LbfgsbResult(x=state.x, f=state.f, g=state.g, k=state.k,
                         status=state.status, n_evals=state.n_evals,
                         rounds=state.rounds, state=state)
+
+
+def lbfgsb_minimize(
+    fun_batched: Callable[[Array], Tuple[Array, Array]],
+    x0: Array,
+    lower: Array,
+    upper: Array,
+    options: LbfgsbOptions = LbfgsbOptions(),
+) -> LbfgsbResult:
+    """Minimize independent D-dimensional problems in lockstep.
+
+    The batch may carry an *arbitrary leading shape*: ``x0`` of shape
+    ``(*batch, D)`` runs ``prod(batch)`` problems through ONE
+    ``lax.while_loop`` (the fleet-ask requirement: a ``(S, B, D)`` fleet
+    of studies × restarts shares its QN iterations and line-search
+    rounds, instead of vmapping S separate ``while_loop``s).  Every
+    result leaf leads with ``batch`` again; ``rounds`` stays a scalar
+    (rounds are shared by construction).
+
+    Args:
+      fun_batched: maps ``(*batch, D)`` → ``(batch values, (*batch, D)
+        grads)``.  One call == one *batched evaluation round* in the
+        paper's sense.
+      x0: ``(*batch, D)`` initial points.
+      lower/upper: broadcastable to ``x0.shape`` box bounds (±inf ok).
+    """
+    if x0.ndim < 2:
+        raise ValueError(f"x0 must be (*batch, D), got {x0.shape}")
+    lower = jnp.broadcast_to(jnp.asarray(lower, x0.dtype), x0.shape)
+    upper = jnp.broadcast_to(jnp.asarray(upper, x0.dtype), x0.shape)
+    if x0.ndim == 2:
+        return _minimize_2d(fun_batched, x0, lower, upper, options)
+
+    batch_shape, D = x0.shape[:-1], x0.shape[-1]
+
+    def fun_flat(xf):
+        f, g = fun_batched(xf.reshape(batch_shape + (D,)))
+        return f.reshape(-1), g.reshape(-1, D)
+
+    res = _minimize_2d(fun_flat, x0.reshape(-1, D),
+                       lower.reshape(-1, D), upper.reshape(-1, D), options)
+
+    def unflat(leaf):
+        if leaf.ndim == 0:          # shared round counter
+            return leaf
+        return leaf.reshape(batch_shape + leaf.shape[1:])
+
+    return jax.tree.map(unflat, res)
 
 
 def lbfgsb_minimize_jit(fun_batched, x0, lower, upper,

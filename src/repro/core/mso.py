@@ -188,12 +188,48 @@ def maximize_acqf(
                      engine_stats=eng.stats_snapshot())
 
 
+def closure_engine(acq_batched):
+    """Build a reusable :class:`~repro.engine.EvalEngine` for a plain
+    closure ``X -> (k,)`` — THE way to amortize compiles across
+    :func:`maximize_acqf_closure` calls (the engine is tagged with its
+    source closure so the wrapper can verify consistency)."""
+    from repro.engine.engine import EvalEngine
+
+    def fn(state, X):
+        del state
+        return acq_batched(X)
+    fn.__wrapped_closure__ = acq_batched
+    return EvalEngine(fn)
+
+
 def maximize_acqf_closure(acq_batched, x0, lower, upper, *,
-                          strategy="dbe", options=None, q=1):
+                          strategy="dbe", options=None, q=1, engine=None):
     """Convenience wrapper for plain closures ``X -> (k,)`` (tests/examples).
-    Recompiles per closure identity — fine outside hot loops."""
+
+    Recompile behavior: the engine's jit caches key on *function
+    identity*, and every call here wraps ``acq_batched`` in a fresh
+    state-form function — so calling this in a loop with fresh closures
+    retraces per call (fine outside hot loops).  To reuse compiled
+    programs across calls, pass ``engine=closure_engine(acq_batched)``
+    built once, or use :func:`maximize_acqf` directly with a
+    module-level ``acq_fn(state, X)`` and per-call ``acq_state``.
+
+    An ``engine`` evaluates ITS OWN captured ``acq_fn`` — so one built
+    from a different closure would silently maximize the wrong
+    acquisition; this wrapper rejects any engine not built from
+    ``acq_batched`` (via :func:`closure_engine`'s tag).
+    """
+    if engine is not None:
+        src = getattr(engine.acq_fn, "__wrapped_closure__", None)
+        if src is not acq_batched and engine.acq_fn is not acq_batched:
+            raise ValueError(
+                "engine= was built from a different closure than "
+                "acq_batched (the engine evaluates its own acq_fn); "
+                "build it with closure_engine(acq_batched)")
+
     def fn(state, X):
         del state
         return acq_batched(X)
     return maximize_acqf(fn, x0, lower, upper, acq_state=None,
-                         strategy=strategy, options=options, q=q)
+                         strategy=strategy, options=options, q=q,
+                         engine=engine)

@@ -20,24 +20,28 @@ from repro.engine.engine import (BatchEvalFn, EngineStats, EvalEngine,
 from repro.engine.plan import EvalPlan, bucket_ladder
 from repro.engine.posterior import (BACKENDS, fused_logei_acq, posterior,
                                     resolve_backend)
-# The ask module imports repro.gp.fit, which re-enters repro.core → this
-# package: importing it eagerly here would break `import repro.gp` as the
-# FIRST repro import (gp.fit would still be mid-initialization when ask
-# needs it).  PEP 562 lazy export defers it until first attribute access,
-# by which point every layer is fully initialized.
+# The ask/fleet modules import repro.gp.fit, which re-enters repro.core →
+# this package: importing them eagerly here would break `import repro.gp`
+# as the FIRST repro import (gp.fit would still be mid-initialization when
+# ask needs it).  PEP 562 lazy export defers them until first attribute
+# access, by which point every layer is fully initialized.
 _ASK_EXPORTS = ("AskConfig", "AskEngine", "SuggestInfo")
+_FLEET_EXPORTS = ("FleetConfig", "FleetEngine")
 
 
 def __getattr__(name):
     if name in _ASK_EXPORTS:
         from repro.engine import ask
         return getattr(ask, name)
+    if name in _FLEET_EXPORTS:
+        from repro.engine import fleet
+        return getattr(fleet, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 __all__ = [
     "AskConfig", "AskEngine", "BACKENDS", "BatchEvalFn", "CountingJit",
-    "EngineStats", "EvalEngine", "EvalPlan", "SuggestInfo",
-    "bucket_ladder", "default_engine", "fused_logei_acq", "posterior",
-    "resolve_backend",
+    "EngineStats", "EvalEngine", "EvalPlan", "FleetConfig", "FleetEngine",
+    "SuggestInfo", "bucket_ladder", "default_engine", "fused_logei_acq",
+    "posterior", "resolve_backend",
 ]

@@ -81,6 +81,65 @@ class SuggestInfo(NamedTuple):
     best_acq: Array      # ()  acquisition value at the suggestion
 
 
+# ---------------------------------------------------------------------------
+# study-axis cores — the per-study halves of the suggest pipeline, exposed
+# as pure functions of ONE padded study so the fleet plane (engine/fleet.py)
+# can stack whole studies along a leading axis with jax.vmap while AskEngine
+# keeps calling them unbatched.  All three are vmap-safe: masked reductions
+# only, no data-dependent shapes.
+# ---------------------------------------------------------------------------
+
+def refit_core(x, y, n_valid, thetas, tlo, tup, *, dim: int, kernel: str,
+               backend: str, fit_opts: LbfgsbOptions):
+    """Full-refit core: masked standardize → multi-start MAP fit → (for
+    fused posterior backends) K⁻¹ materialization.
+
+    Returns ``(y_std, valid, theta, chol, alpha, kinv)`` with ``kinv``
+    ``None`` on the ``"xla"`` backend.
+    """
+    b = x.shape[0]
+    valid = jnp.arange(b) < n_valid
+    y_std, _, _ = standardize_masked(-y, valid)
+    theta, chol, alpha, _ = fit_padded_core(
+        x, y_std, valid, thetas, tlo, tup,
+        dim=dim, kernel=kernel, opts=fit_opts)
+    kinv = None
+    if backend != "xla":
+        kinv = cho_solve((chol, True), jnp.eye(b, dtype=x.dtype))
+    return y_std, valid, theta, chol, alpha, kinv
+
+
+def incr_core(x, y, n_valid, theta, chol, kinv, *, dim: int, kernel: str):
+    """Incremental-refit core: masked standardize → rank-one Cholesky /
+    bordered-K⁻¹ append at fixed θ (O(n²)).
+
+    Returns ``(y_std, valid, params, chol, alpha, kinv, ok)``; ``ok``
+    flags a numerically sound Schur complement (callers fall back to
+    :func:`refit_core` when it is False).
+    """
+    b = x.shape[0]
+    valid = jnp.arange(b) < n_valid
+    y_std, _, _ = standardize_masked(-y, valid)
+    params = unpack_theta(theta, dim)
+    chol_new, alpha, kinv_new, ok = incremental_update(
+        x, y_std, n_valid, params, chol, kinv, kernel=kernel)
+    return y_std, valid, params, chol_new, alpha, kinv_new, ok
+
+
+def restart_points(key, x, y_std, valid, n_restarts: int):
+    """Device-side restart sampling: incumbent + (B−1) uniform draws.
+
+    Returns ``(x0 (B, D), best_val)`` — the per-study restart stack and
+    the incumbent (standardized, maximization-scale) objective value.
+    """
+    masked = jnp.where(valid, y_std, -jnp.inf)
+    best_val = jnp.max(masked)
+    inc = x[jnp.argmax(masked)]
+    rand = jax.random.uniform(key, (n_restarts - 1, x.shape[-1]), x.dtype)
+    x0 = jnp.concatenate([inc[None], rand], 0)
+    return x0, best_val
+
+
 class AskEngine:
     """Fused ask(): observe() appends, suggest() runs one device program."""
 
@@ -234,12 +293,7 @@ class AskEngine:
         cfg = self.cfg
         gp = GPState(x_train=x, y_train=y_std, params=params, chol=chol,
                      alpha=alpha, kernel=cfg.kernel, kinv=kinv)
-        masked = jnp.where(valid, y_std, -jnp.inf)
-        best_val = jnp.max(masked)
-        inc = x[jnp.argmax(masked)]
-        rand = jax.random.uniform(key, (cfg.n_restarts - 1, cfg.dim),
-                                  x.dtype)
-        x0 = jnp.concatenate([inc[None], rand], 0)
+        x0, best_val = restart_points(key, x, y_std, valid, cfg.n_restarts)
         fun = self.engine.device_fun((gp, best_val), self._plan)
         res = lbfgsb_minimize(fun, x0, jnp.zeros_like(x0),
                               jnp.ones_like(x0), cfg.mso)
@@ -248,27 +302,20 @@ class AskEngine:
         return res.x[best], stats
 
     def _full_impl(self, key, x, y, n_valid, thetas, tlo, tup):
-        b, D = x.shape
-        valid = jnp.arange(b) < n_valid
-        y_std, _, _ = standardize_masked(-y, valid)
-        theta, chol, alpha, _ = fit_padded_core(
-            x, y_std, valid, thetas, tlo, tup,
-            dim=D, kernel=self.cfg.kernel, opts=self._fit_opts)
-        kinv = None
-        if self.cfg.backend != "xla":
-            kinv = cho_solve((chol, True), jnp.eye(b, dtype=x.dtype))
+        D = x.shape[1]
+        y_std, valid, theta, chol, alpha, kinv = refit_core(
+            x, y, n_valid, thetas, tlo, tup, dim=D, kernel=self.cfg.kernel,
+            backend=self.cfg.backend, fit_opts=self._fit_opts)
         params = unpack_theta(theta, D)
         best_x, stats = self._mso_tail(key, x, y_std, valid, params,
                                        chol, alpha, kinv)
         return best_x, theta, chol, alpha, kinv, stats
 
     def _incr_impl(self, key, x, y, n_valid, theta, chol, kinv):
-        b, D = x.shape
-        valid = jnp.arange(b) < n_valid
-        y_std, _, _ = standardize_masked(-y, valid)
-        params = unpack_theta(theta, D)
-        chol_new, alpha, kinv_new, ok = incremental_update(
-            x, y_std, n_valid, params, chol, kinv, kernel=self.cfg.kernel)
+        D = x.shape[1]
+        y_std, valid, params, chol_new, alpha, kinv_new, ok = incr_core(
+            x, y, n_valid, theta, chol, kinv,
+            dim=D, kernel=self.cfg.kernel)
         best_x, stats = self._mso_tail(key, x, y_std, valid, params,
                                        chol_new, alpha, kinv_new)
         return best_x, chol_new, alpha, kinv_new, ok, stats

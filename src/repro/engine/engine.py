@@ -114,6 +114,28 @@ class EvalEngine:
 
         return fun_batched
 
+    def fleet_device_fun(self, states, plan: EvalPlan):
+        """Batched ``(S, B, q·D) → ((S, B), (S, B, q·D))`` evaluation for
+        the fleet's leading-batch lockstep solver.
+
+        ``states`` is the per-slot acquisition state stacked along a
+        leading study axis (every pytree leaf leads with S); row s of the
+        evaluation batch is scored against study s's state.  Consumed by
+        the fleet ask programs in ``engine/fleet.py``.
+        """
+        acq_fn = self.acq_fn
+
+        def acq_all(states_, X):
+            Xq = X.reshape(X.shape[:2] + plan.point_shape)
+            return jax.vmap(acq_fn)(states_, Xq)          # (S, B)
+
+        def fun_batched(X: Array) -> Tuple[Array, Array]:
+            f = -acq_all(states, X)
+            g = jax.grad(lambda Z: -jnp.sum(acq_all(states, Z)))(X)
+            return f, g
+
+        return fun_batched
+
     def run_lockstep(self, state, x0: Array, lower: Array, upper: Array,
                      opts: LbfgsbOptions, plan: EvalPlan) -> LbfgsbResult:
         """dbe_vec: the whole multi-start solve as ONE jitted program

@@ -1,0 +1,525 @@
+"""The fleet ask plane — vmapped multi-study suggest with slot-based
+continuous batching.
+
+PR 2 fused one study's whole suggest path into one device program per GP
+size bucket (``engine/ask.py``); at BO sizes (B≈10 restarts, D≈8) that
+program still leaves the device almost idle.  This module applies the
+paper's D-BE argument once more, *across studies*: stack S whole studies
+along a new leading axis — exactly as ``dbe_vec`` stacked restarts — and
+serve every study's ``suggest()`` from ONE compiled program per
+(GP size bucket, slot count):
+
+* **stacked study state** — per-slot padded ``X (S, b, D)`` / ``y (S,
+  b)`` buffers with per-slot observation counts, θ ``(S, P)``, Cholesky
+  factors ``(S, b, b)`` and (fused posterior backends) K⁻¹ stacks;
+* **vmapped GP cores** — ``refit_core`` / ``incr_core`` (the study-axis
+  halves of the PR-2 ask pipeline) run under ``jax.vmap`` with
+  heterogeneous per-study ``n`` masks;
+* **one lockstep solve for the whole fleet** — restart sampling per slot
+  (per-study PRNG streams) feeds a single ``(S, B, D)`` L-BFGS-B solve:
+  ``core.lbfgsb`` takes the leading batch shape natively, so QN
+  iterations and line-search rounds are shared across the fleet instead
+  of vmapping S separate ``while_loop``s;
+* **slot-based continuous batching** — mirroring ``serve/engine.py``:
+  fixed slot blocks grouped by ``pad_bucket_for`` bucket, queued studies
+  admitted at trial boundaries, studies migrating blocks on bucket
+  growth (host-side state compaction, θ carried for warm starts), idle
+  slots frozen behind benign masked rows.  Blocks of the same (bucket,
+  slots) shape share compiled programs, so compile counts stay
+  O(#buckets) — independent of how many studies the fleet serves.
+
+Exactness mirrors PR 2: per-slot rows are updated element-wise along the
+study axis and the lockstep solver freezes converged/idle rows, so a
+study's trajectory is bit-for-bit independent of its slot and of which
+other studies share the batch (tests/test_fleet.py).
+"""
+from __future__ import annotations
+
+import zlib
+from dataclasses import dataclass
+from typing import Dict, Hashable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lbfgsb import LbfgsbOptions, lbfgsb_minimize
+from repro.engine.ask import (_MSO_DEFAULT, SuggestInfo, incr_core,
+                              refit_core, restart_points)
+from repro.engine.cache import CountingJit
+from repro.engine.engine import EvalEngine
+from repro.engine.plan import EvalPlan
+from repro.gp.fit import (FIT_OPTS, _FAR, pad_bucket_for, standardize_masked,
+                          theta_bounds, theta_init_grid, unpack_theta)
+from repro.gp.gpr import GPState
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class FleetConfig:
+    """Static description of one fleet ask plane (everything here is baked
+    into the compiled programs; a fleet serves studies that share it)."""
+    dim: int
+    n_restarts: int = 10             # B: incumbent + (B-1) uniform
+    slots: int = 8                   # S: compiled slot-batch width per block
+    kernel: str = "matern52"
+    backend: str = "xla"             # resolved posterior backend
+    pad_bucket: int = 32             # GP size-bucket quantum
+    refit_interval: int = 8          # full MAP refit cadence (≥1)
+    warm_start: bool = True          # seed MAP fits from the slot's prev θ
+    gp_fit_restarts: int = 2
+    gp_fit_maxiter: int = 60
+    mso: LbfgsbOptions = _MSO_DEFAULT
+
+    def __post_init__(self):
+        if self.slots < 1:
+            raise ValueError("slots must be >= 1")
+        if self.refit_interval < 1:
+            raise ValueError("refit_interval must be >= 1")
+        if self.n_restarts < 2:
+            raise ValueError("n_restarts must be >= 2")
+
+
+class _Study:
+    """Host-side record of one study: observations (source of truth for
+    admission/migration compaction), slot assignment, refit bookkeeping,
+    and the pending-request/result mailbox."""
+
+    __slots__ = ("sid", "xs", "ys", "block", "slot", "n_fit",
+                 "since_refit", "has_factor", "has_theta", "theta_host",
+                 "trial", "pending", "result")
+
+    def __init__(self, sid: Hashable):
+        self.sid = sid
+        self.xs: List[np.ndarray] = []
+        self.ys: List[float] = []
+        self.block: Optional["_Block"] = None
+        self.slot = -1
+        self.n_fit = 0
+        self.since_refit = 0
+        self.has_factor = False          # factor rows valid (incr eligible)
+        self.has_theta = False           # θ row fitted (warm-start eligible)
+        self.theta_host: Optional[np.ndarray] = None   # carried on migration
+        self.trial = 0                   # suggest counter (default PRNG)
+        self.pending: Optional[Tuple[Array, int]] = None  # (key, fit_seed)
+        self.result: Optional[Tuple[np.ndarray, SuggestInfo]] = None
+
+    @property
+    def n(self) -> int:
+        return len(self.ys)
+
+
+# Idle slots carry this many benign pseudo-observations: the _FAR pattern
+# gives a ~diagonal gram, zero standardized targets, and a fast-converging
+# frozen row — never NaNs that would stall the shared lockstep loops.
+_IDLE_N = 2
+
+
+class _Block:
+    """One slot block: ``cfg.slots`` studies padded to one GP size bucket.
+
+    Blocks with equal (bucket, slots) share the fleet's compiled programs
+    (the CountingJit caches key on shapes), so adding blocks never adds
+    traces.
+    """
+
+    def __init__(self, cfg: FleetConfig, bucket: int, dtype):
+        S, b, D = cfg.slots, bucket, cfg.dim
+        self.bucket = bucket
+        idle = np.full((b, D), _FAR) + np.arange(b)[:, None]
+        self.idle_x = np.asarray(idle)               # host row template
+        self.x = jnp.asarray(np.tile(idle[None], (S, 1, 1)), dtype)
+        self.y = jnp.zeros((S, b), dtype)
+        th0 = np.zeros((D + 2,))
+        th0[-1] = -4.0                               # theta_init_grid base
+        self.theta0 = np.asarray(th0)
+        self.theta = jnp.asarray(np.tile(th0[None], (S, 1)), dtype)
+        eye = np.eye(b)
+        self.chol = jnp.asarray(np.tile(eye[None], (S, 1, 1)), dtype)
+        self.alpha = jnp.zeros((S, b), dtype)
+        self.kinv = (None if cfg.backend == "xla" else
+                     jnp.asarray(np.tile(eye[None], (S, 1, 1)), dtype))
+        self.studies: List[Optional[_Study]] = [None] * S
+
+    def free_slot(self) -> int:
+        for s, st in enumerate(self.studies):
+            if st is None:
+                return s
+        return -1
+
+    def n_valid(self) -> np.ndarray:
+        nv = np.full((len(self.studies),), _IDLE_N, np.int32)
+        for s, st in enumerate(self.studies):
+            if st is not None:
+                nv[s] = st.n
+        return nv
+
+
+class FleetEngine:
+    """Serve S concurrent studies' ask() from one device program.
+
+    Usage is a request/step/result cycle (continuous batching, mirroring
+    ``serve.ServeEngine``): ``observe()`` appends per-study observations,
+    ``request_suggest()`` enqueues a study's next ask, ``step()`` admits
+    queued studies and runs one fused fleet program per active block, and
+    ``pop_result()`` collects each study's suggestion.  ``suggest()``
+    wraps the cycle for synchronous (solo) callers — any other studies'
+    pending requests ride along in the same step.
+    """
+
+    def __init__(self, engine: EvalEngine, cfg: FleetConfig):
+        self.engine = engine
+        self.cfg = cfg
+        self._plan = EvalPlan.for_batch(cfg.n_restarts, cfg.dim)
+        self._fit_opts = FIT_OPTS._replace(maxiter=cfg.gp_fit_maxiter)
+        # three programs per (bucket, slots) shape: full refit,
+        # incremental refit, and the fleet MSO tail
+        self._full_jit = CountingJit(self._full_impl)
+        self._incr_jit = CountingJit(self._incr_impl)
+        self._mso_jit = CountingJit(self._mso_impl)
+        self._dtype = jnp.asarray(0.0).dtype
+        self._studies: Dict[Hashable, _Study] = {}
+        self._queue: List[_Study] = []       # awaiting a slot
+        self._blocks: List[_Block] = []
+        self._base_key = jax.random.PRNGKey(0)
+        # economy counters
+        self.n_full_refits = 0
+        self.n_incremental = 0
+        self.n_fallbacks = 0
+        self.n_steps = 0
+        self.n_admissions = 0
+        self.n_migrations = 0
+
+    # ----------------------------------------------------------- host api
+    def add_study(self, sid: Hashable) -> None:
+        """Register a study; it is admitted to a slot at the next trial
+        boundary (step) once it has observations."""
+        if sid in self._studies:
+            raise ValueError(f"study {sid!r} already registered")
+        st = _Study(sid)
+        self._studies[sid] = st
+        self._queue.append(st)
+
+    def observe(self, sid: Hashable, x_unit, y: float) -> None:
+        """Append one observation (unit-cube x, raw minimized y)."""
+        st = self._studies[sid]
+        x_unit = np.asarray(x_unit, np.float64).reshape(self.cfg.dim)
+        st.xs.append(x_unit)
+        st.ys.append(float(y))
+        blk = st.block
+        if blk is None:
+            return
+        if pad_bucket_for(st.n, self.cfg.pad_bucket) > blk.bucket:
+            # bucket migration: evict now, re-admit (compacted into a
+            # larger block) at the next trial boundary
+            self._evict(st)
+            self.n_migrations += 1
+        else:
+            i = st.n - 1
+            blk.x = blk.x.at[st.slot, i].set(
+                jnp.asarray(x_unit, blk.x.dtype))
+            blk.y = blk.y.at[st.slot, i].set(float(y))
+
+    def request_suggest(self, sid: Hashable, key: Optional[Array] = None,
+                        fit_seed: Optional[int] = None) -> None:
+        """Enqueue one suggest for ``sid`` (no-op if one is already
+        pending or an uncollected result is waiting).  ``key`` defaults
+        to the fleet's per-study stream ``fold_in(fold_in(base,
+        study), trial)``; ``fit_seed`` to the trial counter."""
+        st = self._studies[sid]
+        if st.pending is not None or st.result is not None:
+            return
+        if key is None:
+            # crc32, not hash(): string sids must give the same stream in
+            # every process (hash() is salted per interpreter)
+            sid_tag = zlib.crc32(repr(sid).encode()) & 0x7FFFFFFF
+            skey = jax.random.fold_in(self._base_key, sid_tag)
+            key = jax.random.fold_in(skey, st.trial)
+        if fit_seed is None:
+            fit_seed = st.trial
+        st.pending = (key, int(fit_seed))
+
+    def pop_result(self, sid: Hashable
+                   ) -> Optional[Tuple[np.ndarray, SuggestInfo]]:
+        """Collect (and clear) the study's suggestion, if ready."""
+        st = self._studies[sid]
+        res, st.result = st.result, None
+        return res
+
+    def suggest(self, sid: Hashable, key: Optional[Array] = None,
+                fit_seed: Optional[int] = None
+                ) -> Tuple[np.ndarray, SuggestInfo]:
+        """Synchronous ask for one study: request → step → collect (other
+        studies' pending requests are batched into the same step)."""
+        self.request_suggest(sid, key, fit_seed)
+        self.step()
+        res = self.pop_result(sid)
+        assert res is not None
+        return res
+
+    def step(self) -> int:
+        """One trial boundary: admit queued studies, then run one fused
+        program set per block holding pending requests.  Returns the
+        number of suggestions produced."""
+        self._admit()
+        for st in self._queue:
+            if st.pending is not None:
+                st.pending = None      # drop the bad request: one broken
+                raise ValueError(      # study must not wedge the fleet
+                    f"study {st.sid!r} requested suggest() with "
+                    f"{st.n} observations; needs >= 2")
+        served = 0
+        for blk in self._blocks:
+            served += self._step_block(blk)
+        self.n_steps += 1 if served else 0
+        return served
+
+    def stats_snapshot(self) -> dict:
+        n_compiles = (self._full_jit.n_compiles + self._incr_jit.n_compiles
+                      + self._mso_jit.n_compiles)
+        return {
+            "n_studies": len(self._studies),
+            "n_blocks": len(self._blocks),
+            "n_full_refits": self.n_full_refits,
+            "n_incremental": self.n_incremental,
+            "n_fallbacks": self.n_fallbacks,
+            "n_steps": self.n_steps,
+            "n_admissions": self.n_admissions,
+            "n_migrations": self.n_migrations,
+            "n_full_compiles": self._full_jit.n_compiles,
+            "n_incr_compiles": self._incr_jit.n_compiles,
+            "n_mso_compiles": self._mso_jit.n_compiles,
+            "n_fleet_compiles": n_compiles,
+        }
+
+    # ------------------------------------------------------- scheduler
+    def _admit(self) -> None:
+        still: List[_Study] = []
+        for st in self._queue:
+            if st.n < 1:                 # nothing to pad yet: stay queued
+                still.append(st)
+                continue
+            bucket = pad_bucket_for(st.n, self.cfg.pad_bucket)
+            blk = next((bl for bl in self._blocks
+                        if bl.bucket == bucket and bl.free_slot() >= 0),
+                       None)
+            if blk is None:
+                blk = _Block(self.cfg, bucket, self._dtype)
+                self._blocks.append(blk)
+            self._install(st, blk, blk.free_slot())
+            self.n_admissions += 1
+        self._queue = still
+
+    def _install(self, st: _Study, blk: _Block, slot: int) -> None:
+        """Host-side state compaction: copy the study's live observations
+        into the block's padded slot row (θ carried for warm starts)."""
+        n = st.n
+        x_row = np.array(blk.idle_x)
+        x_row[:n] = np.stack(st.xs)
+        y_row = np.zeros((blk.bucket,))
+        y_row[:n] = st.ys
+        blk.x = blk.x.at[slot].set(jnp.asarray(x_row, blk.x.dtype))
+        blk.y = blk.y.at[slot].set(jnp.asarray(y_row, blk.y.dtype))
+        if st.theta_host is not None:
+            blk.theta = blk.theta.at[slot].set(
+                jnp.asarray(st.theta_host, blk.theta.dtype))
+        blk.studies[slot] = st
+        st.block, st.slot = blk, slot
+
+    def _evict(self, st: _Study) -> None:
+        """Free the study's slot (bucket migration): save θ for the warm
+        start, reset the row to the benign idle pattern, re-queue."""
+        blk, s = st.block, st.slot
+        if st.has_theta:
+            st.theta_host = np.asarray(blk.theta[s])
+        dt = blk.x.dtype
+        blk.x = blk.x.at[s].set(jnp.asarray(blk.idle_x, dt))
+        blk.y = blk.y.at[s].set(jnp.zeros((blk.bucket,), dt))
+        blk.theta = blk.theta.at[s].set(jnp.asarray(blk.theta0, dt))
+        eye = jnp.eye(blk.bucket, dtype=dt)
+        blk.chol = blk.chol.at[s].set(eye)
+        blk.alpha = blk.alpha.at[s].set(jnp.zeros((blk.bucket,), dt))
+        if blk.kinv is not None:
+            blk.kinv = blk.kinv.at[s].set(eye)
+        blk.studies[s] = None
+        st.block, st.slot = None, -1
+        st.has_factor = False            # the factor dies with the bucket
+        self._queue.append(st)
+
+    def _step_block(self, blk: _Block) -> int:
+        cfg = self.cfg
+        req = [(s, st) for s, st in enumerate(blk.studies)
+               if st is not None and st.pending is not None]
+        if not req:
+            return 0
+        for s, st in req:
+            if st.n < 2:
+                st.pending = None      # drop, don't wedge (see step())
+                raise ValueError(f"suggest() for study {st.sid!r} needs "
+                                 f">= 2 observations, have {st.n}")
+        S = cfg.slots
+        nv = jnp.asarray(blk.n_valid())
+
+        # refit_interval=k ⇒ a full MAP refit every k-th suggest (per
+        # slot; k=1 disables incremental updates) — same predicate as
+        # AskEngine.suggest
+        kind: Dict[int, str] = {}
+        do_incr = np.zeros((S,), bool)
+        for s, st in req:
+            incremental = (st.has_factor and st.n - st.n_fit == 1
+                           and st.since_refit < cfg.refit_interval - 1)
+            if incremental:
+                do_incr[s] = True
+                kind[s] = "incremental"
+            else:
+                kind[s] = "full"
+
+        if do_incr.any():
+            chol, alpha, kinv, ok = self._incr_jit(
+                blk.x, blk.y, nv, blk.theta, blk.chol, blk.alpha,
+                blk.kinv, jnp.asarray(do_incr))
+            blk.chol, blk.alpha, blk.kinv = chol, alpha, kinv
+            ok = np.asarray(ok)
+            for s, st in req:
+                if not do_incr[s]:
+                    continue
+                if ok[s]:
+                    st.since_refit += 1
+                    self.n_incremental += 1
+                else:                    # exactness fallback: refit for real
+                    kind[s] = "fallback"
+                    self.n_fallbacks += 1
+
+        full_slots = [s for s, _ in req if kind[s] != "incremental"]
+        if full_slots:
+            dt = blk.x.dtype
+            R = cfg.gp_fit_restarts
+            theta_host = np.asarray(blk.theta)      # warm-start inits
+            rows = []
+            for s in range(S):
+                st = blk.studies[s]
+                if s in kind and kind[s] != "incremental":
+                    init = None
+                    if cfg.warm_start and st.has_theta:
+                        init = unpack_theta(
+                            jnp.asarray(theta_host[s], dt), cfg.dim)
+                    rows.append(theta_init_grid(
+                        cfg.dim, dt, R, st.pending[1], init=init))
+                else:                    # masked-out slot: benign inits
+                    rows.append(theta_init_grid(cfg.dim, dt, R, 0))
+            thetas = jnp.stack(rows)                # (S, R, P)
+            tlo, tup = theta_bounds(cfg.dim, dt)
+            do_full = np.zeros((S,), bool)
+            do_full[full_slots] = True
+            theta, chol, alpha, kinv = self._full_jit(
+                blk.x, blk.y, nv, thetas,
+                jnp.broadcast_to(tlo, thetas.shape),
+                jnp.broadcast_to(tup, thetas.shape),
+                jnp.asarray(do_full), blk.theta, blk.chol, blk.alpha,
+                blk.kinv)
+            blk.theta, blk.chol, blk.alpha, blk.kinv = \
+                theta, chol, alpha, kinv
+            for s in full_slots:
+                st = blk.studies[s]
+                st.since_refit = 0
+                st.has_theta = True
+                self.n_full_refits += 1
+
+        keys = np.zeros((S, 2), np.uint32)
+        for s, st in req:
+            keys[s] = np.asarray(st.pending[0])
+        best_x, stats = self._mso_jit(
+            jnp.asarray(keys), blk.x, blk.y, nv, blk.theta, blk.chol,
+            blk.alpha, blk.kinv)
+        bx = np.asarray(best_x)                     # ONE (S, D) transfer
+        k_arr, ev_arr, rounds, bacq = stats
+        for s, st in req:
+            st.n_fit = st.n
+            st.has_factor = True
+            st.trial += 1
+            info = SuggestInfo(kind=kind[s], n_iters=k_arr[s],
+                               n_evals=ev_arr[s], rounds=rounds,
+                               best_acq=bacq[s])
+            st.result = (bx[s], info)
+            st.pending = None
+        # frozen idle/non-requesting rows are the fleet's padding
+        # analogue: only requesters' evals count as live points
+        ev_live = np.zeros((S, cfg.n_restarts), np.int64)
+        for s, _ in req:
+            ev_live[s] = np.asarray(ev_arr[s])
+        self.engine.record_lockstep_economy(S * cfg.n_restarts, rounds,
+                                            ev_live)
+        return len(req)
+
+    # ------------------------------------------------------- device side
+    def _full_impl(self, x, y, n_valid, thetas, tlo, tup, do_full,
+                   theta_old, chol_old, alpha_old, kinv_old):
+        """Vmapped full refit over the slot axis; ``do_full`` masks which
+        slots commit (the rest keep their previous state)."""
+        cfg = self.cfg
+
+        def one(x_s, y_s, nv, th, lo, up):
+            _, _, theta, chol, alpha, kinv = refit_core(
+                x_s, y_s, nv, th, lo, up, dim=cfg.dim, kernel=cfg.kernel,
+                backend=cfg.backend, fit_opts=self._fit_opts)
+            return theta, chol, alpha, kinv
+
+        theta_n, chol_n, alpha_n, kinv_n = jax.vmap(one)(
+            x, y, n_valid, thetas, tlo, tup)
+
+        def sel(new, old):
+            m = do_full.reshape((-1,) + (1,) * (new.ndim - 1))
+            return jnp.where(m, new, old)
+
+        kinv = None if kinv_old is None else sel(kinv_n, kinv_old)
+        return (sel(theta_n, theta_old), sel(chol_n, chol_old),
+                sel(alpha_n, alpha_old), kinv)
+
+    def _incr_impl(self, x, y, n_valid, theta, chol_old, alpha_old,
+                   kinv_old, do_incr):
+        """Vmapped rank-one refit over the slot axis; a slot commits only
+        when requested (``do_incr``) AND its Schur complement is sound."""
+        cfg = self.cfg
+
+        def one(x_s, y_s, nv, th, ch, ki):
+            _, _, _, chol_new, alpha, kinv_new, ok = incr_core(
+                x_s, y_s, nv, th, ch, ki, dim=cfg.dim, kernel=cfg.kernel)
+            return chol_new, alpha, kinv_new, ok
+
+        chol_n, alpha_n, kinv_n, ok = jax.vmap(one)(
+            x, y, n_valid, theta, chol_old, kinv_old)
+        commit = do_incr & ok
+
+        def sel(new, old):
+            m = commit.reshape((-1,) + (1,) * (new.ndim - 1))
+            return jnp.where(m, new, old)
+
+        kinv = None if kinv_old is None else sel(kinv_n, kinv_old)
+        return sel(chol_n, chol_old), sel(alpha_n, alpha_old), kinv, ok
+
+    def _mso_impl(self, keys, x, y, n_valid, theta, chol, alpha, kinv):
+        """The fleet MSO tail: per-slot restart sampling feeds ONE
+        (S, B, D) lockstep solve; per-slot argmax selects suggestions."""
+        cfg = self.cfg
+        b = x.shape[1]
+
+        def prep(key, x_s, y_s, nv):
+            valid = jnp.arange(b) < nv
+            y_std, _, _ = standardize_masked(-y_s, valid)
+            x0, best_val = restart_points(key, x_s, y_std, valid,
+                                          cfg.n_restarts)
+            return y_std, x0, best_val
+
+        y_std, x0, best_val = jax.vmap(prep)(keys, x, y, n_valid)
+        params = jax.vmap(lambda th: unpack_theta(th, cfg.dim))(theta)
+        gp = GPState(x_train=x, y_train=y_std, params=params, chol=chol,
+                     alpha=alpha, kernel=cfg.kernel, kinv=kinv)
+        fun = self.engine.fleet_device_fun((gp, best_val), self._plan)
+        res = lbfgsb_minimize(fun, x0, jnp.zeros_like(x0),
+                              jnp.ones_like(x0), cfg.mso)
+        best = jnp.argmax(-res.f, axis=1)                     # (S,)
+        best_x = jnp.take_along_axis(
+            res.x, best[:, None, None], axis=1)[:, 0]         # (S, D)
+        best_acq = -jnp.take_along_axis(res.f, best[:, None], axis=1)[:, 0]
+        return best_x, (res.k, res.n_evals, res.rounds, best_acq)

@@ -43,7 +43,8 @@ class Request:
 
 class ServeEngine:
     def __init__(self, params, cfg: ModelConfig, *, slots: int = 8,
-                 max_len: int = 512, eos_id: int = -1):
+                 max_len: int = 512, eos_id: int = -1,
+                 prefill_chunk: Optional[int] = None):
         if cfg.family == "encdec":
             raise NotImplementedError(
                 "engine serves decoder-only archs; whisper uses "
@@ -53,13 +54,19 @@ class ServeEngine:
         self.slots = slots
         self.max_len = max_len
         self.eos_id = eos_id
+        # cap prefill steps per step() call (None = drain): bounds how
+        # long a newly admitted long prompt can stall decode; mid-prefill
+        # slots resume from their per-slot offset at the next boundary
+        self.prefill_chunk = prefill_chunk
         self.cache = lm.init_cache(cfg, slots, max_len)
         self.positions = np.zeros((slots,), np.int64)
         self.active: List[Optional[Request]] = [None] * slots
         self.queue: List[Request] = []
         self._step_fn = CountingJit(
             lambda p, t, c, i: lm.decode_step(p, cfg, t, c, i))
-        self.stats: Dict[str, Any] = {"steps": 0, "tokens": 0, "wall": 0.0}
+        self._prefilling: set = set()     # slots mid-prefill (per-slot pos)
+        self.stats: Dict[str, Any] = {"steps": 0, "tokens": 0, "wall": 0.0,
+                                      "compiles": 0}
 
     # ---------------------------------------------------------------- api
     def submit(self, req: Request):
@@ -77,34 +84,47 @@ class ServeEngine:
         return np.asarray(logits)
 
     def _fill_slots(self):
-        """Admit queued requests; prefill all newly admitted slots together
-        step-by-step (idle/established slots ride along masked)."""
-        newly = []
+        """Admit queued requests, then advance prefill for every slot
+        still prefilling — each from its own per-slot offset
+        (``positions[s]``), so slots admitted at different step
+        boundaries share prefill steps without anyone restarting at
+        token 0 (idle/established slots ride along masked).  With
+        ``prefill_chunk`` set, at most that many prefill steps run per
+        call and unfinished slots stay in ``self._prefilling``, resuming
+        from their offsets at the next boundary."""
         for s in range(self.slots):
             if self.active[s] is None and self.queue:
                 req = self.queue.pop(0)
                 self.active[s] = req
                 self.positions[s] = 0
                 self.cache = lm.reset_slot(self.cfg, self.cache, s)
-                newly.append(s)
-        if not newly:
-            return
-        max_pref = max(len(self.active[s].prompt) - 1 for s in newly)
-        for i in range(max_pref):
+                if len(req.prompt) > 1:
+                    self._prefilling.add(s)
+        budget = self.prefill_chunk
+        while self._prefilling and (budget is None or budget > 0):
             toks = np.zeros((self.slots, 1), np.int32)
             pos = np.full((self.slots,), -1, np.int64)
-            for s in newly:
+            done = []
+            for s in self._prefilling:
                 prompt = self.active[s].prompt
-                if i < len(prompt) - 1:
-                    toks[s, 0] = int(prompt[i])
-                    pos[s] = i
-                    self.positions[s] = i + 1
+                i = int(self.positions[s])          # per-slot offset
+                toks[s, 0] = int(prompt[i])
+                pos[s] = i
+                self.positions[s] = i + 1
+                if i + 1 >= len(prompt) - 1:        # last prompt token is
+                    done.append(s)                  # fed by the decode step
             self._batched_step(toks, pos)
+            for s in done:
+                self._prefilling.discard(s)
+            if budget is not None:
+                budget -= 1
 
     def step(self) -> int:
-        """One synchronized decode step over all slots; returns #tokens."""
+        """One synchronized decode step over all ready slots (mid-prefill
+        slots keep prefilling instead); returns #tokens."""
         self._fill_slots()
-        act = [s for s in range(self.slots) if self.active[s] is not None]
+        act = [s for s in range(self.slots)
+               if self.active[s] is not None and s not in self._prefilling]
         if not act:
             return 0
         toks = np.zeros((self.slots, 1), np.int32)

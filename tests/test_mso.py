@@ -84,6 +84,30 @@ def test_closure_api():
     np.testing.assert_allclose(res.best_x, 0.5, atol=1e-5)
 
 
+def test_closure_api_forwards_engine():
+    """Passing engine= reuses one compiled plane across calls instead of
+    retracing per fresh closure; an engine built from a DIFFERENT
+    closure is rejected (it would evaluate its own acq_fn)."""
+    from repro.core.mso import closure_engine
+
+    acq = jax.vmap(lambda x: -jnp.sum((x - 0.5) ** 2))
+    eng = closure_engine(acq)
+    rng = np.random.default_rng(1)
+    opts = MsoOptions(maxiter=50, pgtol=1e-8)
+    for _ in range(3):
+        x0 = rng.uniform(0, 1, (4, 3))
+        res = maximize_acqf_closure(acq, x0, 0.0, 1.0, strategy="dbe_vec",
+                                    options=opts, engine=eng)
+        np.testing.assert_allclose(res.best_x, 0.5, atol=1e-5)
+    assert eng.n_compiles == 1      # one lockstep trace, shared by 3 calls
+    assert res.engine_stats["n_compiles"] == 1
+
+    other = jax.vmap(lambda x: -jnp.sum(x ** 2))
+    with pytest.raises(ValueError, match="different closure"):
+        maximize_acqf_closure(other, rng.uniform(0, 1, (4, 3)), 0.0, 1.0,
+                              strategy="dbe_vec", options=opts, engine=eng)
+
+
 def test_shrinking_active_set():
     """Converged restarts leave the coroutine batch (paper's pruning)."""
     from repro.core import coroutine as co

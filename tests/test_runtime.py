@@ -117,6 +117,57 @@ def test_engine_continuous_batching(tiny):
     assert all(len(r.out_tokens) == 5 for r in done)
 
 
+def test_engine_stats_readable_before_first_step(tiny):
+    """stats["compiles"] must exist from construction (reading stats
+    before the first step used to KeyError)."""
+    cfg, params = tiny
+    eng = ServeEngine(params, cfg, slots=2, max_len=64)
+    assert eng.stats["compiles"] == 0
+    eng.submit(Request(uid=0, prompt=np.arange(4, dtype=np.int32),
+                       max_new_tokens=2))
+    eng.run_until_drained()
+    assert eng.stats["compiles"] == 1          # one trace, steady state
+
+
+def test_engine_staggered_admission_prefill(tiny):
+    """A request admitted mid-run prefills from its own per-slot offset
+    (established slots ride along masked) and must decode exactly what a
+    solo run produces."""
+    cfg, params = tiny
+    rng = np.random.default_rng(2)
+    pa = rng.integers(0, cfg.vocab_size, 9).astype(np.int32)
+    pb = rng.integers(0, cfg.vocab_size, 5).astype(np.int32)
+
+    solo = {}
+    for uid, prompt in ((0, pa), (1, pb)):
+        e = ServeEngine(params, cfg, slots=2, max_len=64)
+        e.submit(Request(uid=uid, prompt=prompt, max_new_tokens=6))
+        solo[uid] = e.run_until_drained()[0].out_tokens
+
+    eng = ServeEngine(params, cfg, slots=2, max_len=64)
+    eng.submit(Request(uid=0, prompt=pa, max_new_tokens=6))
+    for _ in range(3):                  # A decodes alone for a few steps
+        eng.step()
+    eng.submit(Request(uid=1, prompt=pb, max_new_tokens=6))
+    done = eng.run_until_drained()
+    out = {r.uid: r.out_tokens for r in done}
+    assert out[0] == solo[0], (out[0], solo[0])
+    assert out[1] == solo[1], (out[1], solo[1])
+
+    # chunked prefill: B joins A's in-flight prefill wave at its own
+    # offset 0 while A resumes from its cursor — never restarting at
+    # token 0 — and both still decode the solo outputs
+    eng2 = ServeEngine(params, cfg, slots=2, max_len=64, prefill_chunk=2)
+    eng2.submit(Request(uid=0, prompt=pa, max_new_tokens=6))
+    eng2.step()                         # A prefills 2 of 8 prompt steps
+    assert eng2._prefilling == {0} and eng2.positions[0] == 2
+    eng2.submit(Request(uid=1, prompt=pb, max_new_tokens=6))
+    done = eng2.run_until_drained()
+    out = {r.uid: r.out_tokens for r in done}
+    assert out[0] == solo[0], (out[0], solo[0])
+    assert out[1] == solo[1], (out[1], solo[1])
+
+
 def test_engine_slot_isolation(tiny):
     """A request's outputs must not depend on what previously occupied its
     slot (cache reset on admission)."""
