@@ -187,6 +187,21 @@ def main(argv=None):
     for backend in args.backends:
         out.extend(bench_backend(backend, args))
 
+    # headline scalars, one per configuration (the speed rows carry no
+    # "fused" key; per-run rows do)
+    summary = {}
+    for r in out:
+        if "fused" in r:
+            tag = f"{r['backend']}_{'fused' if r['fused'] else 'unfused'}"
+            summary[f"{tag}_median_suggest_ms"] = r["median_suggest_ms"]
+            if r["steady_ms"] is not None:
+                summary[f"{tag}_steady_ms"] = r["steady_ms"]
+        else:
+            summary[f"{r['backend']}_speedup_median"] = r["speedup_median"]
+            if r["speedup_steady"] is not None:
+                summary[f"{r['backend']}_speedup_steady"] = \
+                    r["speedup_steady"]
+
     record = {
         "bench": "ask_latency",
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
@@ -194,6 +209,7 @@ def main(argv=None):
         "jax_backend": jax.default_backend(),
         "python": platform.python_version(),
         "mode": "tiny" if args.tiny else "default",
+        "summary": summary,
         "rows": out,
     }
     with open(args.out, "w") as f:

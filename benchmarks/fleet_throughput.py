@@ -35,9 +35,14 @@ are not a performance signal.
 
 Emits BENCH_fleet.json.
 
+--mesh N adds fleet_mesh rows: the same fleet with its slot blocks
+sharded over 1 and N devices (cfg.slots is the per-device width).
+--check-compiles then additionally asserts compile counts do not move
+with the device count — the mesh half of the compile-economy invariant.
+
 Usage:
   python benchmarks/fleet_throughput.py [--tiny] [--rounds N]
-      [--fleet-sizes 1 4 16 64] [--slots K]
+      [--fleet-sizes 1 4 16 64] [--slots K] [--mesh N]
       [--backends xla pallas_interpret ...] [--check-compiles]
       [--out BENCH_fleet.json]
 """
@@ -100,11 +105,22 @@ def run_loop(S, backend, args):
     return round_ms, steady, {"n_compiles_total": compiles()}
 
 
-def run_fleet(S, backend, args):
-    """One FleetSampler serving all S studies per round."""
+def run_fleet(S, backend, args, mesh_devices=None):
+    """One FleetSampler serving all S studies per round.
+
+    ``mesh_devices`` shards the fleet's slot blocks over that many
+    devices (``cfg.slots`` is the PER-DEVICE width, so the per-device
+    slot count shrinks as devices are added and the compiled local
+    program stays fixed-width — the placement-independence invariant)."""
     objs = _objectives(S, args.D)
+    mesh = None
+    slots = min(args.slots, S)
+    if mesh_devices is not None:
+        from repro.launch.mesh import make_fleet_mesh
+        mesh = make_fleet_mesh(mesh_devices)
+        slots = max(1, min(args.slots, -(-S // mesh_devices)))
     fs = FleetSampler([BoxSpace.cube(args.D, *o.bounds) for o in objs],
-                      seed=0, slots=min(args.slots, S),
+                      seed=0, slots=slots, mesh=mesh,
                       **_sampler_kw(args, backend))
     round_ms, steady = [], []
     for r in range(args.rounds):
@@ -121,7 +137,7 @@ def run_fleet(S, backend, args):
             fs.tell(i, t.trial_id, obj(t.x))
     snap = fs.stats_snapshot()
     n_buckets = len({blk.bucket for blk in fs.fleet._blocks})
-    return round_ms, steady, {
+    extra = {
         "n_buckets": n_buckets,
         "n_blocks": snap["n_blocks"],
         "n_compiles_total": snap["n_fleet_compiles"],
@@ -130,6 +146,15 @@ def run_fleet(S, backend, args):
         "n_fallbacks": snap["n_fallbacks"],
         "n_migrations": snap["n_migrations"],
     }
+    if mesh_devices is not None:
+        extra.update({
+            "mesh_devices": snap["n_devices"],
+            "slots_per_device_width": slots,
+            "occupancy_per_device": snap["slots_per_device"],
+            "n_migrations_intra": snap["n_migrations_intra"],
+            "n_migrations_cross": snap["n_migrations_cross"],
+        })
+    return round_ms, steady, extra
 
 
 def _throughputs(S, round_ms, steady, n_startup):
@@ -189,6 +214,47 @@ def bench_backend(backend, sizes, args):
                      "speedup_steady": speed_steady})
         fleet_compiles[S] = (fl["n_compiles_total"], fl["n_buckets"])
 
+        # mesh rows: the same fleet sharded over 1 and --mesh devices —
+        # compile counts must not move with the device count
+        if args.mesh and backend == "xla":
+            mesh_compiles = {}
+            for ndev in sorted({1, args.mesh}):
+                round_ms, steady, extra = run_fleet(S, backend, args,
+                                                    mesh_devices=ndev)
+                agg, sps, n_steady = _throughputs(S, round_ms, steady,
+                                                  args.n_startup)
+                rows.append({
+                    "backend": backend, "mode": "fleet_mesh", "S": S,
+                    "rounds": args.rounds, "D": args.D, "B": args.B,
+                    "pad": args.pad,
+                    "refit_interval": args.refit_interval,
+                    "n_startup": args.n_startup,
+                    "round_ms": [round(m, 3) for m in round_ms],
+                    "suggests_per_sec_aggregate": agg,
+                    "suggests_per_sec_steady": sps,
+                    "n_steady_rounds": n_steady,
+                    **extra,
+                })
+                mesh_compiles[ndev] = (extra["n_compiles_total"],
+                                       extra["n_buckets"])
+                agg_s = f"{agg:.2f}/s" if agg else "n/a"
+                print(f"fleet_bench,{backend},S={S},mesh={ndev}dev,"
+                      f"aggregate={agg_s},"
+                      f"compiles={extra['n_compiles_total']},"
+                      f"occupancy={extra['occupancy_per_device']}",
+                      flush=True)
+            if args.check_compiles:
+                vals = set(mesh_compiles.values())
+                assert len(vals) == 1, \
+                    f"S={S}: fleet compile counts vary with device " \
+                    f"count: {mesh_compiles}"
+                compiles, n_buckets = vals.pop()
+                assert compiles <= 3 * n_buckets, \
+                    f"S={S} mesh: {compiles} traces for {n_buckets} " \
+                    f"buckets (must be <= 3/bucket)"
+                print(f"fleet_bench,{backend},S={S},mesh compile check "
+                      f"OK {mesh_compiles}", flush=True)
+
     if args.check_compiles:
         for S, (compiles, n_buckets) in fleet_compiles.items():
             assert compiles <= 3 * n_buckets, \
@@ -221,8 +287,18 @@ def main(argv=None):
     ap.add_argument("--backends", nargs="+", default=None,
                     choices=("xla", "pallas", "pallas_interpret"))
     ap.add_argument("--check-compiles", action="store_true")
+    ap.add_argument("--mesh", type=int, default=None,
+                    help="also run the fleet sharded over 1..N devices "
+                    "(needs --xla_force_host_platform_device_count>=N "
+                    "or N real devices)")
     ap.add_argument("--out", default="BENCH_fleet.json")
     args = ap.parse_args(argv)
+
+    if args.mesh is not None and args.mesh > len(jax.devices()):
+        raise SystemExit(
+            f"--mesh {args.mesh} needs {args.mesh} visible devices, have "
+            f"{len(jax.devices())} (set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={args.mesh})")
 
     if args.tiny:
         args.rounds = args.rounds or 14
@@ -248,6 +324,20 @@ def main(argv=None):
             sizes = [S for S in sizes if S <= SPEEDUP_TARGET_S]
         out.extend(bench_backend(backend, sizes, args))
 
+    # headline scalars, one per configuration — dashboards and PR diffs
+    # read these without walking the row arrays
+    summary = {}
+    for r in out:
+        if r.get("summary"):
+            summary[f"{r['backend']}_S{r['S']}_speedup_aggregate"] = \
+                r["speedup_aggregate"]
+            if r["speedup_steady"] is not None:
+                summary[f"{r['backend']}_S{r['S']}_speedup_steady"] = \
+                    r["speedup_steady"]
+        elif r.get("mode") == "fleet_mesh":
+            summary[f"{r['backend']}_S{r['S']}_mesh{r['mesh_devices']}"
+                    f"_aggregate_sps"] = r["suggests_per_sec_aggregate"]
+
     record = {
         "bench": "fleet_throughput",
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
@@ -255,6 +345,8 @@ def main(argv=None):
         "jax_backend": jax.default_backend(),
         "python": platform.python_version(),
         "mode": "tiny" if args.tiny else "default",
+        "mesh": args.mesh,
+        "summary": summary,
         "rows": out,
     }
     with open(args.out, "w") as f:

@@ -123,6 +123,14 @@ def main(argv=None):
     for n, D in cases:
         out.extend(bench(n, D, B=B, reps=reps, backend=args.backend))
 
+    # headline scalars, one per (case, strategy) — dashboards and PR
+    # diffs read these without walking the row arrays
+    summary = {}
+    for r in out:
+        key = f"n{r['n']}_D{r['D']}_{r['strategy']}"
+        summary[f"{key}_wall_ms"] = r["wall_ms"]
+        summary[f"{key}_speedup_vs_seq"] = r["speedup_vs_seq"]
+
     record = {
         "bench": "mso_walltime",
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
@@ -132,6 +140,7 @@ def main(argv=None):
         "mode": ("tiny" if args.tiny else "full" if args.full
                  else "default"),
         "posterior_backend": args.backend,
+        "summary": summary,
         "rows": out,
     }
     with open(args.out, "w") as f:

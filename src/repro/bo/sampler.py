@@ -411,6 +411,13 @@ class FleetSampler:
     ``spaces`` may be one :class:`BoxSpace` (replicated S times via
     ``n_studies``) or an explicit list; every study shares the static
     fleet config (dim, restarts, bucketing, backend).
+
+    ``mesh`` (optional): a 1-D study mesh
+    (:func:`repro.launch.mesh.make_fleet_mesh`).  Slot blocks then hold
+    ``slots`` studies PER DEVICE (``slots × ndev`` total), sharded over
+    the mesh's study axis, and the fleet programs run under ``shard_map``
+    — per-study trajectories stay bit-for-bit identical to any other
+    placement, including no mesh at all.
     """
 
     def __init__(
@@ -429,6 +436,7 @@ class FleetSampler:
         posterior_backend: str = "auto",
         refit_interval: int = 8,
         warm_start: bool = True,
+        mesh=None,
     ):
         from repro.engine import FleetConfig, FleetEngine
         from repro.core.lbfgsb import LbfgsbOptions
@@ -450,7 +458,7 @@ class FleetSampler:
             refit_interval=refit_interval, warm_start=warm_start,
             gp_fit_restarts=gp_fit_restarts,
             mso=LbfgsbOptions(m=o.m, maxiter=o.maxiter, pgtol=o.pgtol,
-                              ftol=o.ftol, maxls=o.maxls)))
+                              ftol=o.ftol, maxls=o.maxls)), mesh=mesh)
         self.samplers = [
             GPSampler(sp, strategy="dbe_vec", fused=True, seed=seed + i,
                       n_startup_trials=n_startup_trials,

@@ -79,6 +79,44 @@ def pspec(shape: Sequence[int], axes: Sequence[Optional[str]],
 
 
 # ---------------------------------------------------------------------------
+# fleet pspecs: stacked study-axis state (engine/fleet.py)
+# ---------------------------------------------------------------------------
+# The fleet ask plane stacks whole studies along ONE leading axis; unlike
+# model parameters there is no logical-name negotiation — every leaf of the
+# stacked state (X (S, b, D), y (S, b), θ (S, P), factors (S, b, b), PRNG
+# keys (S, 2)) shards its leading axis over the mesh's study dimension and
+# replicates the rest.  These helpers are the fleet-facing analogue of
+# ``param_pspecs``.
+
+FLEET_AXIS = "study"
+
+
+def fleet_pspec(ndim: int, axis: str = FLEET_AXIS) -> P:
+    """Leading-study-axis spec: ``P(axis, None, ...)`` for an ndim-leaf."""
+    if ndim < 1:
+        raise ValueError("fleet state leaves must have a leading study axis")
+    return P(axis, *([None] * (ndim - 1)))
+
+
+def fleet_sharding(mesh: Mesh, ndim: int = 1,
+                   axis: Optional[str] = None) -> NamedSharding:
+    """NamedSharding splitting the leading study axis of an ndim-leaf over
+    a 1-D fleet mesh (``make_fleet_mesh``).  A P() with fewer axes than the
+    array rank replicates the trailing dims, so ndim=1 serves every leaf."""
+    if axis is None:
+        axis = mesh.axis_names[0]
+    return NamedSharding(mesh, fleet_pspec(ndim, axis))
+
+
+def fleet_shardings(mesh: Mesh, tree, axis: Optional[str] = None):
+    """Same-structure pytree of leading-study-axis NamedShardings."""
+    if axis is None:
+        axis = mesh.axis_names[0]
+    return jax.tree.map(
+        lambda x: fleet_sharding(mesh, jnp.ndim(x), axis), tree)
+
+
+# ---------------------------------------------------------------------------
 # boxed parameters: value + logical axes travel together through init
 # ---------------------------------------------------------------------------
 

@@ -6,10 +6,18 @@ ticks exactly once per compiled executable and never on cache hits.  Both
 the acquisition engine and the serving engine build their compiled planes
 from this, which is what makes "compiles per run" a first-class, testable
 metric (the ROADMAP's compilation-discipline requirement).
+
+Mesh-sharded callers (the fleet ask plane) pass ``in_shardings``: every
+call then keys the jit cache on the (mesh, PartitionSpec) pair baked in
+here — never on whichever device a host-built input happened to land on,
+and never on which slots are live.  That is what keeps fleet compile
+counts O(#buckets) and independent of the mesh's device count: a block's
+programs are traced once per (bucket, slots) shape per mesh, no matter
+how studies move across devices between calls.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Sequence
+from typing import Any, Callable, Optional, Sequence
 
 import jax
 
@@ -19,7 +27,9 @@ class CountingJit:
 
     def __init__(self, fn: Callable, *,
                  static_argnums: Sequence[int] = (),
-                 donate_argnums: Sequence[int] = ()):
+                 donate_argnums: Sequence[int] = (),
+                 in_shardings: Optional[Any] = None,
+                 out_shardings: Optional[Any] = None):
         self.n_compiles = 0
 
         def counted(*args, **kwargs):
@@ -32,9 +42,15 @@ class CountingJit:
         # there to avoid per-call "donated buffer unused" warnings
         if jax.default_backend() == "cpu":
             donate_argnums = ()
+        kw: dict = {}
+        if in_shardings is not None:
+            kw["in_shardings"] = in_shardings
+        if out_shardings is not None:
+            kw["out_shardings"] = out_shardings
         self._jit = jax.jit(counted,
                             static_argnums=tuple(static_argnums) or None,
-                            donate_argnums=tuple(donate_argnums) or None)
+                            donate_argnums=tuple(donate_argnums) or None,
+                            **kw)
 
     def __call__(self, *args: Any, **kwargs: Any):
         return self._jit(*args, **kwargs)

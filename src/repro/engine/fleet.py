@@ -32,6 +32,27 @@ Exactness mirrors PR 2: per-slot rows are updated element-wise along the
 study axis and the lockstep solver freezes converged/idle rows, so a
 study's trajectory is bit-for-bit independent of its slot and of which
 other studies share the batch (tests/test_fleet.py).
+
+**Mesh sharding** — pass ``mesh=`` (a 1-D ``"study"`` mesh from
+``launch.mesh.make_fleet_mesh``) and every slot block widens to
+``cfg.slots × ndev`` rows placed behind ``NamedSharding(mesh,
+P("study"))``: device d owns the ``cfg.slots`` contiguous slots
+``[d·slots, (d+1)·slots)`` and the three block programs run under
+``shard_map``, so each device refits and solves only its own slots.  The
+hot loop needs NO cross-device collectives: every stacked op is already
+element-wise along the study axis, and each device's lockstep
+``while_loop`` runs until its own rows converge.  Pinning the *local*
+width to ``cfg.slots`` on every mesh size is what makes trajectories
+bit-for-bit placement-independent: a vmap's width changes last-ulp
+lowering, but each device always traces the identical fixed-width local
+program, and a study's position inside that program is covered by PR 3's
+bitwise slot/batch-composition-independence invariant.  The host-side
+scheduler balances admissions across per-device occupancy and routes
+bucket-growth migrations through the same evict → host-compact →
+re-admit path, which now doubles as the cross-device state move; compile
+counts stay O(#buckets), independent of S *and* of the mesh's device
+count (the programs key on the mesh and the (bucket, slots) shape, never
+on per-device occupancy).
 """
 from __future__ import annotations
 
@@ -42,8 +63,11 @@ from typing import Dict, Hashable, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh
 
 from repro.core.lbfgsb import LbfgsbOptions, lbfgsb_minimize
+from repro.distributed.sharding import fleet_pspec, fleet_sharding
 from repro.engine.ask import (_MSO_DEFAULT, SuggestInfo, incr_core,
                               refit_core, restart_points)
 from repro.engine.cache import CountingJit
@@ -62,7 +86,7 @@ class FleetConfig:
     into the compiled programs; a fleet serves studies that share it)."""
     dim: int
     n_restarts: int = 10             # B: incumbent + (B-1) uniform
-    slots: int = 8                   # S: compiled slot-batch width per block
+    slots: int = 8                   # compiled slot-batch width PER DEVICE
     kernel: str = "matern52"
     backend: str = "xla"             # resolved posterior backend
     pad_bucket: int = 32             # GP size-bucket quantum
@@ -88,7 +112,7 @@ class _Study:
 
     __slots__ = ("sid", "xs", "ys", "block", "slot", "n_fit",
                  "since_refit", "has_factor", "has_theta", "theta_host",
-                 "trial", "pending", "result")
+                 "trial", "pending", "result", "from_device")
 
     def __init__(self, sid: Hashable):
         self.sid = sid
@@ -96,6 +120,7 @@ class _Study:
         self.ys: List[float] = []
         self.block: Optional["_Block"] = None
         self.slot = -1
+        self.from_device: Optional[int] = None   # device before migration
         self.n_fit = 0
         self.since_refit = 0
         self.has_factor = False          # factor rows valid (incr eligible)
@@ -117,30 +142,49 @@ _IDLE_N = 2
 
 
 class _Block:
-    """One slot block: ``cfg.slots`` studies padded to one GP size bucket.
+    """One slot block: ``width`` studies padded to one GP size bucket.
 
-    Blocks with equal (bucket, slots) share the fleet's compiled programs
+    ``width`` is ``cfg.slots`` per mesh device (``cfg.slots`` exactly when
+    unsharded): the slot axis splits evenly over the mesh, so every device
+    runs the SAME local program on exactly ``cfg.slots`` rows no matter
+    how many devices the mesh has — which is what makes trajectories
+    bit-for-bit placement-independent (a vmap's width changes last-ulp
+    lowering; a slot's position inside a fixed-width vmap never does).
+    Blocks with equal (bucket, width) share the fleet's compiled programs
     (the CountingJit caches key on shapes), so adding blocks never adds
     traces.
     """
 
-    def __init__(self, cfg: FleetConfig, bucket: int, dtype):
-        S, b, D = cfg.slots, bucket, cfg.dim
+    def __init__(self, cfg: FleetConfig, bucket: int, dtype,
+                 sharding=None, width: Optional[int] = None):
+        S, b, D = width or cfg.slots, bucket, cfg.dim
         self.bucket = bucket
+        self.sharding = sharding         # NamedSharding(mesh, P(study))
         idle = np.full((b, D), _FAR) + np.arange(b)[:, None]
         self.idle_x = np.asarray(idle)               # host row template
-        self.x = jnp.asarray(np.tile(idle[None], (S, 1, 1)), dtype)
-        self.y = jnp.zeros((S, b), dtype)
+        self.x = self._pin(jnp.asarray(np.tile(idle[None], (S, 1, 1)),
+                                       dtype))
+        self.y = self._pin(jnp.zeros((S, b), dtype))
         th0 = np.zeros((D + 2,))
         th0[-1] = -4.0                               # theta_init_grid base
         self.theta0 = np.asarray(th0)
-        self.theta = jnp.asarray(np.tile(th0[None], (S, 1)), dtype)
+        self.theta = self._pin(jnp.asarray(np.tile(th0[None], (S, 1)),
+                                           dtype))
         eye = np.eye(b)
-        self.chol = jnp.asarray(np.tile(eye[None], (S, 1, 1)), dtype)
-        self.alpha = jnp.zeros((S, b), dtype)
+        self.chol = self._pin(jnp.asarray(np.tile(eye[None], (S, 1, 1)),
+                                          dtype))
+        self.alpha = self._pin(jnp.zeros((S, b), dtype))
         self.kinv = (None if cfg.backend == "xla" else
-                     jnp.asarray(np.tile(eye[None], (S, 1, 1)), dtype))
+                     self._pin(jnp.asarray(np.tile(eye[None], (S, 1, 1)),
+                                           dtype)))
         self.studies: List[Optional[_Study]] = [None] * S
+
+    def _pin(self, a: Array) -> Array:
+        """Keep block state on its mesh placement: host-side compaction
+        updates (.at[].set scatters) must never silently gather a block
+        onto one device."""
+        return a if self.sharding is None else jax.device_put(
+            a, self.sharding)
 
     def free_slot(self) -> int:
         for s, st in enumerate(self.studies):
@@ -166,18 +210,61 @@ class FleetEngine:
     ``pop_result()`` collects each study's suggestion.  ``suggest()``
     wraps the cycle for synchronous (solo) callers — any other studies'
     pending requests ride along in the same step.
+
+    ``mesh`` (optional): a 1-D study mesh (``make_fleet_mesh``).  Slot
+    blocks then span ``cfg.slots`` slots on EVERY mesh device
+    (``slots × ndev`` total), ``NamedSharding``-split along the slot
+    axis, and the three block programs run under ``shard_map`` — each
+    device serves only its own fixed-width shard with no collectives in
+    the hot loop.  Trajectories are bit-for-bit identical across mesh
+    sizes (and to the unsharded fleet); the scheduler balances admissions
+    over per-device occupancy and bucket-growth migration becomes a
+    cross-device state move when the target slot lives on another device.
     """
 
-    def __init__(self, engine: EvalEngine, cfg: FleetConfig):
+    def __init__(self, engine: EvalEngine, cfg: FleetConfig,
+                 mesh: Optional[Mesh] = None):
         self.engine = engine
         self.cfg = cfg
+        self.mesh = mesh
         self._plan = EvalPlan.for_batch(cfg.n_restarts, cfg.dim)
         self._fit_opts = FIT_OPTS._replace(maxiter=cfg.gp_fit_maxiter)
+        if mesh is None:
+            self._ndev = 1
+            self._slot_sharding = None
+            full_impl, incr_impl, mso_impl = (
+                self._full_impl, self._incr_impl, self._mso_impl)
+            jit_kw: dict = {}
+        else:
+            if len(mesh.axis_names) != 1:
+                raise ValueError("fleet mesh must be 1-D (the study axis);"
+                                 f" got axes {mesh.axis_names}")
+            self._ndev = int(mesh.devices.size)
+            self._slot_sharding = fleet_sharding(mesh)
+            # one shard_map per block program: every operand/result leads
+            # with the slot axis, so a single P(study) prefix spec splits
+            # them all; each device runs the identical slot-local program
+            # (check_rep off: nothing is replicated, nothing is reduced)
+            spec = fleet_pspec(1, mesh.axis_names[0])
+
+            def smap(fn):
+                return shard_map(fn, mesh=mesh, in_specs=spec,
+                                 out_specs=spec, check_rep=False)
+
+            full_impl, incr_impl, mso_impl = (
+                smap(self._full_impl), smap(self._incr_impl),
+                smap(self._mso_impl))
+            # key the jit caches on (mesh, spec): host-built per-step
+            # operands (keys, masks, θ inits) land on the mesh here, so
+            # cache identity never depends on live-device occupancy
+            jit_kw = {"in_shardings": self._slot_sharding}
         # three programs per (bucket, slots) shape: full refit,
         # incremental refit, and the fleet MSO tail
-        self._full_jit = CountingJit(self._full_impl)
-        self._incr_jit = CountingJit(self._incr_impl)
-        self._mso_jit = CountingJit(self._mso_impl)
+        self._full_jit = CountingJit(full_impl, **jit_kw)
+        self._incr_jit = CountingJit(incr_impl, **jit_kw)
+        self._mso_jit = CountingJit(mso_impl, **jit_kw)
+        # a block spans the whole mesh: cfg.slots slots per device
+        self._slots_total = cfg.slots * self._ndev
         self._dtype = jnp.asarray(0.0).dtype
         self._studies: Dict[Hashable, _Study] = {}
         self._queue: List[_Study] = []       # awaiting a slot
@@ -190,6 +277,8 @@ class FleetEngine:
         self.n_steps = 0
         self.n_admissions = 0
         self.n_migrations = 0
+        self.n_migrations_intra = 0      # re-admitted on the same device
+        self.n_migrations_cross = 0      # ... on a different device
 
     # ----------------------------------------------------------- host api
     def add_study(self, sid: Hashable) -> None:
@@ -217,9 +306,9 @@ class FleetEngine:
             self.n_migrations += 1
         else:
             i = st.n - 1
-            blk.x = blk.x.at[st.slot, i].set(
-                jnp.asarray(x_unit, blk.x.dtype))
-            blk.y = blk.y.at[st.slot, i].set(float(y))
+            blk.x = blk._pin(blk.x.at[st.slot, i].set(
+                jnp.asarray(x_unit, blk.x.dtype)))
+            blk.y = blk._pin(blk.y.at[st.slot, i].set(float(y)))
 
     def request_suggest(self, sid: Hashable, key: Optional[Array] = None,
                         fit_seed: Optional[int] = None) -> None:
@@ -287,6 +376,11 @@ class FleetEngine:
             "n_steps": self.n_steps,
             "n_admissions": self.n_admissions,
             "n_migrations": self.n_migrations,
+            "n_migrations_intra": self.n_migrations_intra,
+            "n_migrations_cross": self.n_migrations_cross,
+            "n_devices": self._ndev,
+            "slots_per_device": self._device_occupancy(),
+            "queue_depth": len(self._queue),
             "n_full_compiles": self._full_jit.n_compiles,
             "n_incr_compiles": self._incr_jit.n_compiles,
             "n_mso_compiles": self._mso_jit.n_compiles,
@@ -294,6 +388,37 @@ class FleetEngine:
         }
 
     # ------------------------------------------------------- scheduler
+    def _slot_device(self, slot: int) -> int:
+        """Mesh device owning ``slot``: NamedSharding splits the slot
+        axis into ndev contiguous shards of ``cfg.slots`` rows each."""
+        return slot // self.cfg.slots
+
+    def _device_occupancy(self) -> List[int]:
+        """Live studies resident on each mesh device (all blocks)."""
+        occ = [0] * self._ndev
+        for blk in self._blocks:
+            for s, st in enumerate(blk.studies):
+                if st is not None:
+                    occ[self._slot_device(s)] += 1
+        return occ
+
+    def _pick_slot(self, bucket: int) -> Optional[Tuple["_Block", int]]:
+        """Balanced admission: among free slots in ``bucket``-blocks, take
+        the one whose device holds the fewest live studies (ties: earliest
+        block, lowest slot — on a 1-device mesh this degenerates to the
+        PR-3 first-free-slot rule)."""
+        occ = self._device_occupancy()
+        best = None
+        for bi, bl in enumerate(self._blocks):
+            if bl.bucket != bucket:
+                continue
+            for s, cur in enumerate(bl.studies):
+                if cur is None:
+                    key = (occ[self._slot_device(s)], bi, s)
+                    if best is None or key < best[1]:
+                        best = ((bl, s), key)
+        return None if best is None else best[0]
+
     def _admit(self) -> None:
         still: List[_Study] = []
         for st in self._queue:
@@ -301,31 +426,45 @@ class FleetEngine:
                 still.append(st)
                 continue
             bucket = pad_bucket_for(st.n, self.cfg.pad_bucket)
-            blk = next((bl for bl in self._blocks
-                        if bl.bucket == bucket and bl.free_slot() >= 0),
-                       None)
-            if blk is None:
-                blk = _Block(self.cfg, bucket, self._dtype)
+            pick = self._pick_slot(bucket)
+            if pick is None:
+                blk = _Block(self.cfg, bucket, self._dtype,
+                             self._slot_sharding, self._slots_total)
                 self._blocks.append(blk)
-            self._install(st, blk, blk.free_slot())
+                occ = self._device_occupancy()
+                slot = min(range(self._slots_total),
+                           key=lambda s: (occ[self._slot_device(s)], s))
+            else:
+                blk, slot = pick
+            self._install(st, blk, slot)
             self.n_admissions += 1
         self._queue = still
 
     def _install(self, st: _Study, blk: _Block, slot: int) -> None:
         """Host-side state compaction: copy the study's live observations
-        into the block's padded slot row (θ carried for warm starts)."""
+        into the block's padded slot row (θ carried for warm starts).  On
+        a mesh this IS the cross-device move — the compacted row lands on
+        whichever device owns the target slot."""
         n = st.n
         x_row = np.array(blk.idle_x)
         x_row[:n] = np.stack(st.xs)
         y_row = np.zeros((blk.bucket,))
         y_row[:n] = st.ys
-        blk.x = blk.x.at[slot].set(jnp.asarray(x_row, blk.x.dtype))
-        blk.y = blk.y.at[slot].set(jnp.asarray(y_row, blk.y.dtype))
+        blk.x = blk._pin(blk.x.at[slot].set(jnp.asarray(x_row,
+                                                        blk.x.dtype)))
+        blk.y = blk._pin(blk.y.at[slot].set(jnp.asarray(y_row,
+                                                        blk.y.dtype)))
         if st.theta_host is not None:
-            blk.theta = blk.theta.at[slot].set(
-                jnp.asarray(st.theta_host, blk.theta.dtype))
+            blk.theta = blk._pin(blk.theta.at[slot].set(
+                jnp.asarray(st.theta_host, blk.theta.dtype)))
         blk.studies[slot] = st
         st.block, st.slot = blk, slot
+        if st.from_device is not None:       # bucket-growth re-admission
+            if self._slot_device(slot) == st.from_device:
+                self.n_migrations_intra += 1
+            else:
+                self.n_migrations_cross += 1
+            st.from_device = None
 
     def _evict(self, st: _Study) -> None:
         """Free the study's slot (bucket migration): save θ for the warm
@@ -334,16 +473,19 @@ class FleetEngine:
         if st.has_theta:
             st.theta_host = np.asarray(blk.theta[s])
         dt = blk.x.dtype
-        blk.x = blk.x.at[s].set(jnp.asarray(blk.idle_x, dt))
-        blk.y = blk.y.at[s].set(jnp.zeros((blk.bucket,), dt))
-        blk.theta = blk.theta.at[s].set(jnp.asarray(blk.theta0, dt))
+        blk.x = blk._pin(blk.x.at[s].set(jnp.asarray(blk.idle_x, dt)))
+        blk.y = blk._pin(blk.y.at[s].set(jnp.zeros((blk.bucket,), dt)))
+        blk.theta = blk._pin(blk.theta.at[s].set(
+            jnp.asarray(blk.theta0, dt)))
         eye = jnp.eye(blk.bucket, dtype=dt)
-        blk.chol = blk.chol.at[s].set(eye)
-        blk.alpha = blk.alpha.at[s].set(jnp.zeros((blk.bucket,), dt))
+        blk.chol = blk._pin(blk.chol.at[s].set(eye))
+        blk.alpha = blk._pin(blk.alpha.at[s].set(
+            jnp.zeros((blk.bucket,), dt)))
         if blk.kinv is not None:
-            blk.kinv = blk.kinv.at[s].set(eye)
+            blk.kinv = blk._pin(blk.kinv.at[s].set(eye))
         blk.studies[s] = None
         st.block, st.slot = None, -1
+        st.from_device = self._slot_device(s)
         st.has_factor = False            # the factor dies with the bucket
         self._queue.append(st)
 
@@ -358,7 +500,7 @@ class FleetEngine:
                 st.pending = None      # drop, don't wedge (see step())
                 raise ValueError(f"suggest() for study {st.sid!r} needs "
                                  f">= 2 observations, have {st.n}")
-        S = cfg.slots
+        S = self._slots_total
         nv = jnp.asarray(blk.n_valid())
 
         # refit_interval=k ⇒ a full MAP refit every k-th suggest (per
@@ -434,12 +576,16 @@ class FleetEngine:
             blk.alpha, blk.kinv)
         bx = np.asarray(best_x)                     # ONE (S, D) transfer
         k_arr, ev_arr, rounds, bacq = stats
+        # rounds is per-slot: each slot reports its own device's lockstep
+        # round count (devices loop independently on a mesh; on one
+        # device every slot sees the same shared count)
+        rounds = np.asarray(rounds)
         for s, st in req:
             st.n_fit = st.n
             st.has_factor = True
             st.trial += 1
             info = SuggestInfo(kind=kind[s], n_iters=k_arr[s],
-                               n_evals=ev_arr[s], rounds=rounds,
+                               n_evals=ev_arr[s], rounds=rounds[s],
                                best_acq=bacq[s])
             st.result = (bx[s], info)
             st.pending = None
@@ -448,8 +594,8 @@ class FleetEngine:
         ev_live = np.zeros((S, cfg.n_restarts), np.int64)
         for s, _ in req:
             ev_live[s] = np.asarray(ev_arr[s])
-        self.engine.record_lockstep_economy(S * cfg.n_restarts, rounds,
-                                            ev_live)
+        self.engine.record_lockstep_economy(S * cfg.n_restarts,
+                                            int(rounds.max()), ev_live)
         return len(req)
 
     # ------------------------------------------------------- device side
@@ -522,4 +668,8 @@ class FleetEngine:
         best_x = jnp.take_along_axis(
             res.x, best[:, None, None], axis=1)[:, 0]         # (S, D)
         best_acq = -jnp.take_along_axis(res.f, best[:, None], axis=1)[:, 0]
-        return best_x, (res.k, res.n_evals, res.rounds, best_acq)
+        # per-slot rounds: under shard_map this is the owning device's
+        # (independent) round count, and every output leads with the
+        # slot axis so one P(study) out-spec covers the whole pytree
+        rounds = jnp.full((x.shape[0],), res.rounds)
+        return best_x, (res.k, res.n_evals, rounds, best_acq)

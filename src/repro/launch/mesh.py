@@ -46,6 +46,22 @@ def make_smoke_mesh(shape=(2, 2), axes=("data", "model")):
     return _make_mesh(shape, axes)
 
 
+def make_fleet_mesh(n_devices=None, axis="study"):
+    """1-D mesh for the fleet ask plane: the study axis is embarrassingly
+    parallel, so the fleet shards slot blocks over a single ``"study"``
+    dimension spanning ``n_devices`` (default: every visible device).
+    A 1-device fleet mesh is valid and bit-for-bit equal to running
+    unsharded — the placement-independence invariant."""
+    import numpy as np
+    from jax.sharding import Mesh
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else int(n_devices)
+    if not 1 <= n <= len(devs):
+        raise ValueError(f"fleet mesh needs 1 <= n_devices <= {len(devs)} "
+                         f"visible devices, got {n}")
+    return Mesh(np.asarray(devs[:n]), (axis,))
+
+
 # v5e hardware constants for the roofline (per chip)
 PEAK_FLOPS_BF16 = 197e12        # FLOP/s
 HBM_BW = 819e9                  # B/s

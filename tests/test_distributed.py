@@ -1,31 +1,9 @@
-"""Distributed tests.  Mesh-requiring cases run in SUBPROCESSES so the
-host-device-count flag never leaks into the rest of the suite (per the
-dry-run isolation requirement)."""
-import json
-import os
-import subprocess
-import sys
-import textwrap
-
+"""Distributed tests.  Mesh-requiring cases run in SUBPROCESSES (via the
+shared ``run_sub`` conftest fixture) so the host-device-count flag never
+leaks into the rest of the suite (per the dry-run isolation requirement)."""
 import jax
-import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.distributed.sharding import pspec
-
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-
-def run_sub(code: str, devices: int = 8, timeout: int = 420) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    env["PYTHONPATH"] = os.path.join(REPO, "src")
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                         capture_output=True, text=True, env=env,
-                         timeout=timeout)
-    assert out.returncode == 0, out.stderr[-4000:]
-    return out.stdout
 
 
 # ------------------------------------------------------------------ pspec
@@ -53,7 +31,7 @@ def test_pspec_single_device_mesh_noop():
 
 
 # -------------------------------------------------------------- lowering
-def test_train_step_lowers_on_smoke_mesh():
+def test_train_step_lowers_on_smoke_mesh(run_sub):
     out = run_sub("""
         import jax
         from repro.configs import get_config
@@ -73,7 +51,7 @@ def test_train_step_lowers_on_smoke_mesh():
     assert "COMPILED" in out
 
 
-def test_decode_lowers_on_smoke_mesh():
+def test_decode_lowers_on_smoke_mesh(run_sub):
     out = run_sub("""
         import jax
         from repro.configs import get_config
@@ -92,7 +70,7 @@ def test_decode_lowers_on_smoke_mesh():
     assert "COMPILED" in out
 
 
-def test_moe_sharded_matches_unsharded():
+def test_moe_sharded_matches_unsharded(run_sub):
     """EP shard_map output == single-device reference (same params/input)."""
     out = run_sub("""
         import jax, jax.numpy as jnp, numpy as np
@@ -115,7 +93,7 @@ def test_moe_sharded_matches_unsharded():
     assert "ERR" in out
 
 
-def test_sharded_ce_matches_unsharded():
+def test_sharded_ce_matches_unsharded(run_sub):
     """Vocab-sharded cross-entropy == plain CE."""
     out = run_sub("""
         import jax, jax.numpy as jnp, numpy as np
@@ -141,7 +119,7 @@ def test_sharded_ce_matches_unsharded():
     assert "LOSSES" in out
 
 
-def test_elastic_restore_across_meshes():
+def test_elastic_restore_across_meshes(run_sub):
     """Checkpoint on a (2,4) mesh, restore on (4,2) — values identical."""
     out = run_sub("""
         import jax, jax.numpy as jnp, numpy as np, tempfile, os
@@ -165,7 +143,7 @@ def test_elastic_restore_across_meshes():
     assert "ELASTIC_OK" in out
 
 
-def test_grad_compression_bf16_shrinks_accumulator():
+def test_grad_compression_bf16_shrinks_accumulator(run_sub):
     """bf16 grad accumulation halves the gradient-accumulator footprint.
 
     Verified structurally on the compiled HLO: with compression the scan

@@ -14,6 +14,7 @@ from repro.engine import EvalEngine, FleetConfig, FleetEngine
 from repro.engine.ask import incr_core, refit_core
 from repro.gp.fit import (FIT_OPTS, _FAR, pad_bucket_for, theta_bounds,
                           theta_init_grid)
+from repro.launch.mesh import make_fleet_mesh
 
 _MSO = MsoOptions(maxiter=40, pgtol=1e-2)
 
@@ -254,6 +255,58 @@ def test_fleet_incremental_steady_state_and_quality():
     assert snap["n_incremental"] > snap["n_full_refits"]
     assert snap["n_fallbacks"] == 0
     assert snap["n_migrations"] == 3            # every study crossed b=8
+    # placement observability: every migration is classified, and on one
+    # device every migration is trivially intra-device
+    assert snap["n_migrations_intra"] + snap["n_migrations_cross"] \
+        == snap["n_migrations"]
+    assert snap["n_migrations_cross"] == 0
+    assert snap["n_devices"] == 1
+    assert snap["slots_per_device"] == [3]
+    assert snap["queue_depth"] == 0
+
+
+def test_fleet_stats_placement_keys():
+    """stats_snapshot() placement observability: queue depth tracks the
+    registered-but-unadmitted set; per-device occupancy tracks installs."""
+    from repro.core.acquisition import logei_acq
+    cfg = FleetConfig(dim=2, n_restarts=4, slots=2, pad_bucket=8,
+                      mso=LbfgsbOptions(m=10, maxiter=20, pgtol=1e-2,
+                                        ftol=0.0, maxls=25))
+    fleet = FleetEngine(EvalEngine(logei_acq), cfg)
+    fleet.add_study("a")
+    fleet.add_study("b")
+    snap = fleet.stats_snapshot()
+    assert snap["n_devices"] == 1
+    assert snap["slots_per_device"] == [0]
+    assert snap["queue_depth"] == 2          # registered, not yet admitted
+    rng = np.random.default_rng(0)
+    for x in rng.uniform(0, 1, (2, 2)):
+        fleet.observe("a", x, _sphere(x))
+        fleet.observe("b", x, _sphere(x))
+    fleet.request_suggest("a", jax.random.PRNGKey(0), fit_seed=0)
+    fleet.step()
+    snap = fleet.stats_snapshot()
+    assert snap["queue_depth"] == 0
+    assert snap["slots_per_device"] == [2]
+    assert snap["n_migrations_intra"] == snap["n_migrations_cross"] == 0
+
+
+def test_fleet_mesh1_matches_unsharded_bitwise():
+    """A 1-device fleet mesh is pure plumbing: trajectories and compile
+    counts match the unsharded fleet bit for bit (the in-process half of
+    the placement-independence invariant; the multi-device half runs in
+    tests/test_fleet_mesh.py subprocesses)."""
+    kw = _fleet_kw(refit_interval=4)
+    space = BoxSpace.cube(2, -1.0, 1.0)
+    plain = FleetSampler(space, n_studies=3, seed=5, slots=3, **kw)
+    meshed = FleetSampler(space, n_studies=3, seed=5, slots=3,
+                          mesh=make_fleet_mesh(1), **kw)
+    xs_plain = _drive(plain, 10)
+    xs_mesh = _drive(meshed, 10)
+    np.testing.assert_array_equal(xs_plain, xs_mesh)
+    sp, sm = plain.stats_snapshot(), meshed.stats_snapshot()
+    assert sp["n_fleet_compiles"] == sm["n_fleet_compiles"]
+    assert sm["n_devices"] == 1
 
 
 def test_fleet_admission_and_errors():

@@ -1,0 +1,132 @@
+"""Mesh-sharded fleet plane tests.  Multi-device cases run in
+SUBPROCESSES (``run_sub`` conftest fixture) with virtual host devices so
+the device-count flag never leaks into the rest of the suite.
+
+Invariants pinned here:
+  * device-placement independence — the same fleet driven on a 1-device
+    and an 8-device mesh produces bit-for-bit identical trajectories with
+    identical compile counts (``cfg.slots`` is the PER-DEVICE width, so
+    every device runs the same fixed-width local program);
+  * cross-device migration exactness — a study that outgrows its bucket
+    on one device and is re-admitted on another tracks the solo AskEngine
+    trajectory to <=1e-10 and takes the full-refit program on its first
+    post-migration suggest.
+"""
+
+
+def test_fleet_placement_independence_bitwise(run_sub):
+    out = run_sub("""
+        import jax
+        jax.config.update("jax_enable_x64", True)
+        import numpy as np
+        from repro.bo.sampler import FleetSampler
+        from repro.bo.space import BoxSpace
+        from repro.core.mso import MsoOptions
+        from repro.launch.mesh import make_fleet_mesh
+
+        def sphere(x):
+            return float(np.sum((x - 0.4) ** 2))
+
+        kw = dict(n_startup_trials=4, n_restarts=4, pad_multiple=8,
+                  posterior_backend="xla", refit_interval=4,
+                  mso_options=MsoOptions(maxiter=40, pgtol=1e-2))
+
+        def drive(mesh):
+            fs = FleetSampler(BoxSpace.cube(2, -1.0, 1.0), n_studies=8,
+                              seed=5, slots=2, mesh=mesh, **kw)
+            xs = []
+            for _ in range(10):
+                trials = fs.ask_all()
+                xs.append(np.stack([t.x for t in trials]))
+                for s, t in enumerate(trials):
+                    fs.tell(s, t.trial_id, sphere(t.x))
+            return np.stack(xs), fs.stats_snapshot()
+
+        x1, s1 = drive(make_fleet_mesh(1))
+        x8, s8 = drive(make_fleet_mesh(8))
+        assert np.array_equal(x1, x8), np.max(np.abs(x1 - x8))
+        assert s1["n_fleet_compiles"] == s8["n_fleet_compiles"], (s1, s8)
+        assert s8["n_devices"] == 8
+        assert s8["slots_per_device"] == [1] * 8, s8["slots_per_device"]
+        assert s8["n_migrations"] == 8          # every study crossed b=8
+        print("PLACEMENT_OK", s1["n_fleet_compiles"],
+              s8["n_migrations_intra"], s8["n_migrations_cross"])
+    """, devices=8, timeout=600)
+    assert "PLACEMENT_OK" in out
+
+
+def test_fleet_cross_device_migration_matches_askengine(run_sub):
+    """Bucket growth that lands a study on a DIFFERENT device (evict on
+    device 0, re-admit on device 1) is exact: <=1e-10 vs the solo fused
+    AskEngine, full program on the first post-migration suggest."""
+    out = run_sub("""
+        import jax
+        jax.config.update("jax_enable_x64", True)
+        import numpy as np
+        from repro.core.acquisition import logei_acq
+        from repro.core.lbfgsb import LbfgsbOptions
+        from repro.engine import EvalEngine, FleetConfig, FleetEngine
+        from repro.engine.ask import AskConfig, AskEngine
+        from repro.launch.mesh import make_fleet_mesh
+
+        def f(x):
+            return float(np.sum((x - 0.4) ** 2))
+
+        kw = dict(dim=2, n_restarts=4, pad_bucket=8, refit_interval=6,
+                  warm_start=True, gp_fit_restarts=2,
+                  mso=LbfgsbOptions(m=10, maxiter=40, pgtol=1e-2,
+                                    ftol=0.0, maxls=25))
+        # 2 global slots, 1 per device: admission order pins placement.
+        fleet = FleetEngine(EvalEngine(logei_acq),
+                            FleetConfig(slots=1, **kw),
+                            mesh=make_fleet_mesh(2))
+        ref = AskEngine(EvalEngine(logei_acq), AskConfig(**kw))
+
+        rng = np.random.default_rng(0)
+        obs = {sid: rng.uniform(0, 1, (n, 2))
+               for sid, n in (("D", 9), ("E", 4), ("A", 4))}
+        for sid in ("D", "E", "A"):
+            fleet.add_study(sid)
+            for x in obs[sid]:
+                fleet.observe(sid, x, f(x))
+        for x in obs["A"]:
+            ref.observe(x, f(x))
+        # balanced admission: D (bucket 16) -> device 0; E (bucket 8) ->
+        # device 1 (less loaded); A (bucket 8) -> the remaining device-0
+        # slot.  E then idles; A grows 4 -> 9 and must re-admit into the
+        # free bucket-16 slot on device 1 — a cross-device migration.
+        seed_of = {"D": 0, "A": 2}
+        kinds = []
+        for t in range(7):
+            for sid in ("D", "A"):
+                fleet.request_suggest(
+                    sid, jax.random.fold_in(
+                        jax.random.PRNGKey(100 + seed_of[sid]), t),
+                    fit_seed=t)
+            fleet.step()
+            for sid in ("D", "A"):
+                x, info = fleet.pop_result(sid)
+                if sid == "A":
+                    xr, info_r = ref.suggest(jax.random.fold_in(
+                        jax.random.PRNGKey(102), t), fit_seed=t)
+                    err = float(np.max(np.abs(x - xr)))
+                    assert err <= 1e-10, (t, err)
+                    assert info.kind == info_r.kind, (t, info.kind,
+                                                      info_r.kind)
+                    kinds.append(info.kind)
+                    xo = np.clip(x, 0, 1)
+                    ref.observe(xo, f(xo))     # same trajectory as fleet
+                xo = np.clip(x, 0, 1)
+                fleet.observe(sid, xo, f(xo))
+
+        snap = fleet.stats_snapshot()
+        # A outgrew bucket 8 after round 4 (n: 4 -> 9); round 5 is its
+        # first post-migration suggest and must take the full program
+        assert kinds[5] == "full", kinds
+        assert snap["n_migrations"] == 1, snap
+        assert snap["n_migrations_cross"] == 1, snap
+        assert snap["n_migrations_intra"] == 0, snap
+        assert snap["slots_per_device"] == [1, 2], snap
+        print("CROSS_MIGRATION_OK", kinds)
+    """, devices=2, timeout=600)
+    assert "CROSS_MIGRATION_OK" in out
