@@ -40,15 +40,29 @@ sharded over 1 and N devices (cfg.slots is the per-device width).
 --check-compiles then additionally asserts compile counts do not move
 with the device count — the mesh half of the compile-economy invariant.
 
+--chaos adds a kill-and-recover row: the same schedule runs journaled
+(``journal_dir``), a fault injector kills the "process" at a journal
+offset mid-run (plus one injected unhealthy refit → quarantine),
+``FleetSampler.recover`` rebuilds the fleet, and the schedule completes.
+Reported: recovery time (journal replay ms per 100 trials — the headline
+``summary`` scalar) and goodput under faults (completed suggests per
+second of total wall, crash and recovery included).  --check-compiles
+then also asserts the recovered fleet stays within the ≤3-traces-per-
+(bucket, slots) budget — recovery and quarantine add no programs.
+
 Usage:
   python benchmarks/fleet_throughput.py [--tiny] [--rounds N]
-      [--fleet-sizes 1 4 16 64] [--slots K] [--mesh N]
+      [--fleet-sizes 1 4 16 64] [--slots K] [--mesh N] [--chaos]
       [--backends xla pallas_interpret ...] [--check-compiles]
       [--out BENCH_fleet.json]
 """
 import argparse
 import json
+import os
 import platform
+import shutil
+import sys
+import tempfile
 import time
 
 import jax
@@ -155,6 +169,107 @@ def run_fleet(S, backend, args, mesh_devices=None):
             "n_migrations_cross": snap["n_migrations_cross"],
         })
     return round_ms, steady, extra
+
+
+def run_chaos(S, backend, args):
+    """Kill-and-recover under fault injection: journaled fleet, one
+    injected unhealthy refit (→ quarantine), an injected crash at a
+    journal offset, ``FleetSampler.recover``, then the schedule
+    completes.  Returns one ``fleet_chaos`` row."""
+    sys.path.insert(0, os.path.join(os.path.dirname(
+        os.path.abspath(__file__)), "..", "tests"))
+    from faults import FaultInjector
+    from repro.bo.journal import InjectedCrash
+
+    objs = _objectives(S, args.D)
+    spaces = [BoxSpace.cube(args.D, *o.bounds) for o in objs]
+    d = tempfile.mkdtemp(prefix="fleet_chaos_")
+    # land the kill ~60% through the expected ask+tell record stream
+    kill_seq = max(2, int(0.6 * args.rounds * 2 * S))
+    inj = FaultInjector(kill_at_seq=kill_seq, full_fail={0: 1})
+    fs = FleetSampler(spaces, seed=0, slots=min(args.slots, S),
+                      journal_dir=d, fault_injector=inj,
+                      **_sampler_kw(args, backend))
+    t0 = time.perf_counter()
+    crashed = False
+    try:
+        for r in range(args.rounds):
+            if r == args.n_startup + 1:
+                fs.checkpoint()          # bound the replay length
+            trials = fs.ask_all()
+            for i, (t, obj) in enumerate(zip(trials, objs)):
+                fs.tell(i, t.trial_id, obj(t.x))
+    except InjectedCrash:
+        crashed = True
+    wall1 = time.perf_counter() - t0
+    if not crashed:
+        raise SystemExit(f"--chaos: kill_seq={kill_seq} never reached "
+                         f"(rounds={args.rounds} too small)")
+
+    t0 = time.perf_counter()
+    fs2, rep = FleetSampler.recover(d)
+    recover_wall = time.perf_counter() - t0
+    n_at_recovery = sum(len(s.trials) for s in fs2.samplers)
+    for i, tid in rep.pending:           # asked-but-never-told: re-eval
+        fs2.tell(i, tid, objs[i](fs2.samplers[i].trials[tid].x))
+    t0 = time.perf_counter()
+    while min(len(s.trials) for s in fs2.samplers) < args.rounds:
+        trials = fs2.ask_all()
+        for i, (t, obj) in enumerate(zip(trials, objs)):
+            fs2.tell(i, t.trial_id, obj(t.x))
+    wall2 = time.perf_counter() - t0
+    fs2.drain()
+
+    snap = fs2.stats_snapshot()
+    n_buckets = len({blk.bucket for blk in fs2.fleet._blocks})
+    completed = sum(sum(t.state == "complete" for t in s.trials)
+                    for s in fs2.samplers)
+    # quarantine survives recovery as trial state (the engine counter is
+    # per-process; the journal record is what persists)
+    quarantined = sum(sum(t.state == "quarantined" for t in s.trials)
+                      for s in fs2.samplers)
+    total_wall = wall1 + recover_wall + wall2
+    replay_per_100 = 100.0 * rep.replay_ms / max(n_at_recovery, 1)
+    row = {
+        "backend": backend, "mode": "fleet_chaos", "S": S,
+        "rounds": args.rounds, "D": args.D, "B": args.B,
+        "pad": args.pad, "slots": min(args.slots, S),
+        "refit_interval": args.refit_interval,
+        "n_startup": args.n_startup,
+        "kill_seq": kill_seq,
+        "snapshot_step": rep.snapshot_step,
+        "n_records": rep.n_records,
+        "n_replayed": rep.n_replayed,
+        "truncated_bytes": rep.truncated_bytes,
+        "n_pending_retold": len(rep.pending),
+        "n_trials_at_recovery": n_at_recovery,
+        "replay_ms": round(rep.replay_ms, 3),
+        "recover_wall_ms": round(1e3 * recover_wall, 3),
+        "replay_ms_per_100_trials": round(replay_per_100, 3),
+        "completed_suggests": completed,
+        "goodput_sps": completed / total_wall,
+        "n_quarantined": quarantined,
+        "n_buckets": n_buckets,
+        "n_compiles_total": snap["n_fleet_compiles"],
+    }
+    print(f"fleet_bench,{backend},S={S},chaos,kill_seq={kill_seq},"
+          f"replay={replay_per_100:.2f}ms/100trials,"
+          f"goodput={row['goodput_sps']:.2f}/s,"
+          f"quarantined={quarantined},"
+          f"compiles={snap['n_fleet_compiles']}", flush=True)
+    if args.check_compiles:
+        assert quarantined >= 1, \
+            "chaos: injected unhealthy refit never quarantined"
+        assert rep.truncated_bytes > 0, \
+            "chaos: injected crash left no torn record"
+        assert snap["n_fleet_compiles"] <= 3 * n_buckets, \
+            f"chaos: {snap['n_fleet_compiles']} traces for {n_buckets} " \
+            f"buckets after recovery (must be <= 3/bucket)"
+        print(f"fleet_bench,{backend},S={S},chaos compile check OK "
+              f"({snap['n_fleet_compiles']} traces, {n_buckets} buckets)",
+              flush=True)
+    shutil.rmtree(d)
+    return row
 
 
 def _throughputs(S, round_ms, steady, n_startup):
@@ -291,6 +406,9 @@ def main(argv=None):
                     help="also run the fleet sharded over 1..N devices "
                     "(needs --xla_force_host_platform_device_count>=N "
                     "or N real devices)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="add a journaled kill-and-recover row (fault "
+                    "injection): recovery time + goodput under faults")
     ap.add_argument("--out", default="BENCH_fleet.json")
     args = ap.parse_args(argv)
 
@@ -324,6 +442,9 @@ def main(argv=None):
             sizes = [S for S in sizes if S <= SPEEDUP_TARGET_S]
         out.extend(bench_backend(backend, sizes, args))
 
+    if args.chaos:
+        out.append(run_chaos(args.fleet_sizes[0], "xla", args))
+
     # headline scalars, one per configuration — dashboards and PR diffs
     # read these without walking the row arrays
     summary = {}
@@ -337,6 +458,11 @@ def main(argv=None):
         elif r.get("mode") == "fleet_mesh":
             summary[f"{r['backend']}_S{r['S']}_mesh{r['mesh_devices']}"
                     f"_aggregate_sps"] = r["suggests_per_sec_aggregate"]
+        elif r.get("mode") == "fleet_chaos":
+            summary[f"{r['backend']}_S{r['S']}_chaos_replay_ms_per"
+                    f"_100_trials"] = r["replay_ms_per_100_trials"]
+            summary[f"{r['backend']}_S{r['S']}_chaos_goodput_sps"] = \
+                r["goodput_sps"]
 
     record = {
         "bench": "fleet_throughput",

@@ -1,3 +1,4 @@
 from repro.bo.space import BoxSpace
-from repro.bo.sampler import GPSampler
+from repro.bo.journal import InjectedCrash, StudyJournal
+from repro.bo.sampler import FleetSampler, GPSampler, RecoveryReport
 from repro.bo.objectives import make_objective, OBJECTIVES

@@ -25,18 +25,20 @@ import json
 import os
 import time
 from dataclasses import dataclass, field, replace
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.bo.journal import StudyJournal
 from repro.bo.space import BoxSpace
+from repro.ckpt.manager import CheckpointManager, install_sigterm_handler
 from repro.core.acquisition import logei_acq
 from repro.core.lbfgsb import LbfgsbOptions
 from repro.core.mso import MsoOptions, MsoResult, maximize_acqf
-from repro.engine import (AskConfig, AskEngine, EvalEngine, fused_logei_acq,
-                          resolve_backend)
+from repro.engine import (AskConfig, AskEngine, EvalEngine, FleetFullError,
+                          FleetStudyError, fused_logei_acq, resolve_backend)
 from repro.gp.fit import (fit_gp, pad_bucket_for, standardize,
                           standardize_masked)
 from repro.gp.gpr import with_kinv
@@ -58,10 +60,10 @@ class Trial:
     trial_id: int
     x: np.ndarray
     y: Optional[float] = None
-    state: str = "pending"           # pending | complete | failed
+    state: str = "pending"    # pending | complete | failed | quarantined
     ask_time: float = 0.0
     tell_time: float = 0.0
-    error: Optional[str] = None      # failure reason (failed trials)
+    error: Optional[str] = None      # failure/quarantine reason
 
 
 @dataclass
@@ -126,6 +128,10 @@ class GPSampler:
         self._fleet_sid = None                      # our study id in it
         self._observed_ids: set = set()             # trials in the ask GP
         self._base_key = jax.random.PRNGKey(seed)   # restart-point stream
+        # rng draws consumed by startup asks — recovery burns this many
+        # draws to realign the stream before replaying post-snapshot asks
+        self._n_startup_asks = 0
+        self.degraded: Optional[str] = None   # left the fleet: why
         self.trials: List[Trial] = []
         self.stats = SamplerStats()
         self.last_mso: Optional[MsoResult] = None
@@ -136,6 +142,7 @@ class GPSampler:
         n_done = sum(t.state == "complete" for t in self.trials)
         if n_done < self.n_startup:
             x = self.space.sample(self.rng, 1)[0]
+            self._n_startup_asks += 1
         else:
             x = self._suggest()
         t = Trial(trial_id=len(self.trials), x=x, ask_time=time.time())
@@ -145,6 +152,14 @@ class GPSampler:
     def tell(self, trial_id: int, y: float, *, failed: bool = False,
              error: Optional[str] = None):
         t = self.trials[trial_id]
+        if not failed and not np.isfinite(float(y)):
+            # guardrail: one NaN/inf flowing into standardization poisons
+            # the whole GP (and, in a fleet, the slot block's stacked
+            # programs) — refuse loudly, naming the trial
+            raise ValueError(
+                f"trial {trial_id}: non-finite objective value y={y!r}; "
+                f"report evaluation failures with tell(..., failed=True) "
+                f"— they never enter GP data")
         t.y = None if failed else float(y)
         t.state = "failed" if failed else "complete"
         t.error = error if failed else None
@@ -326,9 +341,29 @@ class GPSampler:
     def _sync_fleet_observations(self) -> None:
         for t in self.trials:
             if t.state == "complete" and t.trial_id not in self._observed_ids:
+                # tag=trial_id: if the fleet later quarantines this
+                # observation, the record names the offending trial
                 self._fleet.observe(self._fleet_sid,
-                                    self.space.to_unit(t.x), t.y)
+                                    self.space.to_unit(t.x), t.y,
+                                    tag=t.trial_id)
                 self._observed_ids.add(t.trial_id)
+
+    def _detach_fleet(self, reason: str) -> None:
+        """Graceful degradation: leave the fleet (shed/parked/rejected)
+        and continue on the solo fused :class:`AskEngine` path.  A fresh
+        ``_observed_ids`` makes the next suggest re-sync every clean
+        observation into the (lazily built) solo engine."""
+        self._fleet, self._fleet_sid = None, None
+        self._observed_ids = set()
+        self.degraded = reason
+
+    def mark_quarantined(self, trial_id: int, reason: str) -> None:
+        """Record that the fleet quarantined this trial's observation out
+        of GP data (numeric poison); the trial keeps its y for audit but
+        no longer counts as complete."""
+        t = self.trials[trial_id]
+        t.state = "quarantined"
+        t.error = reason
 
     def prefetch_suggest(self) -> bool:
         """Enqueue this sampler's next suggest into the attached fleet
@@ -342,17 +377,33 @@ class GPSampler:
         if n_done < self.n_startup:
             return False
         self._sync_fleet_observations()
-        self._fleet.request_suggest(self._fleet_sid, self._restart_key(),
-                                    self.seed + len(self.trials))
+        try:
+            self._fleet.request_suggest(self._fleet_sid,
+                                        self._restart_key(),
+                                        self.seed + len(self.trials))
+        except FleetStudyError as e:
+            # shed/parked while we weren't looking: degrade to solo — the
+            # next ask() runs the solo fused engine instead
+            self._detach_fleet(str(e))
+            return False
         return True
 
     def _suggest_fleet(self) -> np.ndarray:
         self._sync_fleet_observations()
         t0 = time.perf_counter()
-        res = self._fleet.pop_result(self._fleet_sid)
-        if res is None:       # solo path: request + step + collect now
-            res = self._fleet.suggest(self._fleet_sid, self._restart_key(),
-                                      self.seed + len(self.trials))
+        try:
+            res = self._fleet.pop_result(self._fleet_sid)
+            if res is None:   # solo path: request + step + collect now
+                res = self._fleet.suggest(self._fleet_sid,
+                                          self._restart_key(),
+                                          self.seed + len(self.trials))
+        except FleetStudyError as e:
+            res = e
+        if isinstance(res, FleetStudyError):
+            # the fleet shed/parked this study — degrade to the solo
+            # engine rather than failing the caller's ask()
+            self._detach_fleet(str(res))
+            return self._suggest_fused()
         best_x, info = res
         wall = time.perf_counter() - t0
         return self._record_fused_suggest(
@@ -396,6 +447,21 @@ class GPSampler:
         return s
 
 
+_TRIAL_STATE = {"pending": 0, "complete": 1, "failed": 2, "quarantined": 3}
+_TRIAL_STATE_INV = {v: k for k, v in _TRIAL_STATE.items()}
+
+
+@dataclass
+class RecoveryReport:
+    """What :meth:`FleetSampler.recover` reconstructed, and from where."""
+    snapshot_step: Optional[int]     # checkpoint the replay started from
+    n_records: int                   # intact journal records in total
+    n_replayed: int                  # records replayed past the snapshot
+    truncated_bytes: int             # torn journal tail dropped at open
+    pending: List[Tuple[int, int]]   # (study, trial_id) asked, never told
+    replay_ms: float
+
+
 class FleetSampler:
     """Drive S concurrent BO studies through ONE fleet ask plane.
 
@@ -418,6 +484,17 @@ class FleetSampler:
     the mesh's study axis, and the fleet programs run under ``shard_map``
     — per-study trajectories stay bit-for-bit identical to any other
     placement, including no mesh at all.
+
+    ``journal_dir`` (optional) turns on the durability plane: every ask
+    and tell is written (fsync'd, checksummed) to a
+    :class:`~repro.bo.journal.StudyJournal` BEFORE it takes effect, and
+    :meth:`checkpoint` snapshots bound how much of it
+    :meth:`recover` has to replay after a crash.  ``max_studies`` /
+    ``max_queue`` / ``max_blocks`` / ``admission_timeout`` bound
+    admission (backpressure); with ``degrade_to_solo=True`` a rejected,
+    shed, or parked study degrades to the solo :class:`AskEngine` path
+    instead of erroring.  ``fault_injector`` (tests/faults.py) hooks the
+    journal and the fleet's refit health flags for deterministic chaos.
     """
 
     def __init__(
@@ -437,6 +514,15 @@ class FleetSampler:
         refit_interval: int = 8,
         warm_start: bool = True,
         mesh=None,
+        journal_dir: Optional[str] = None,
+        fault_injector=None,
+        max_studies: Optional[int] = None,
+        max_queue: Optional[int] = None,
+        max_blocks: Optional[int] = None,
+        admission_timeout: Optional[float] = None,
+        quarantine_retries: int = 2,
+        degrade_to_solo: bool = False,
+        _journal: Optional[StudyJournal] = None,
     ):
         from repro.engine import FleetConfig, FleetEngine
         from repro.core.lbfgsb import LbfgsbOptions
@@ -450,6 +536,42 @@ class FleetSampler:
             raise ValueError(f"all studies must share one dim, got {dims}")
         backend = resolve_backend(posterior_backend)
         o = mso_options if mso_options is not None else MsoOptions()
+        # ------------------------------------------------ durability plane
+        self.fault_injector = fault_injector
+        self._preempt = None
+        if _journal is not None:         # recover(): reuse the open journal
+            self.journal: Optional[StudyJournal] = _journal
+            journal_dir = _journal.dir
+        elif journal_dir is not None:
+            self.journal = StudyJournal(journal_dir,
+                                        fault_injector=fault_injector)
+        else:
+            self.journal = None
+        self.ckpt = (CheckpointManager(os.path.join(journal_dir, "ckpt"),
+                                       async_save=False)
+                     if journal_dir is not None else None)
+        if self.journal is not None and self.journal.seq == 0:
+            # record 0 pins everything recover() needs to rebuild this
+            # fleet in an empty process
+            self.journal.append({
+                "op": "config",
+                "lower": [sp.lower.tolist() for sp in spaces],
+                "upper": [sp.upper.tolist() for sp in spaces],
+                "seed": seed, "slots": slots,
+                "n_startup_trials": n_startup_trials,
+                "n_restarts": n_restarts, "pad_multiple": pad_multiple,
+                "gp_fit_restarts": gp_fit_restarts,
+                "posterior_backend": backend,
+                "refit_interval": refit_interval,
+                "warm_start": warm_start, "max_studies": max_studies,
+                "max_queue": max_queue, "max_blocks": max_blocks,
+                "admission_timeout": admission_timeout,
+                "quarantine_retries": quarantine_retries,
+                "degrade_to_solo": degrade_to_solo,
+                "mso": dict(m=o.m, maxiter=o.maxiter, pgtol=o.pgtol,
+                            ftol=o.ftol, maxls=o.maxls,
+                            bucketed=o.bucketed)})
+        # ------------------------------------------------------ ask plane
         acq = logei_acq if backend == "xla" else fused_logei_acq(backend)
         self.engine = EvalEngine(acq)
         self.fleet = FleetEngine(self.engine, FleetConfig(
@@ -458,50 +580,270 @@ class FleetSampler:
             refit_interval=refit_interval, warm_start=warm_start,
             gp_fit_restarts=gp_fit_restarts,
             mso=LbfgsbOptions(m=o.m, maxiter=o.maxiter, pgtol=o.pgtol,
-                              ftol=o.ftol, maxls=o.maxls)), mesh=mesh)
-        self.samplers = [
-            GPSampler(sp, strategy="dbe_vec", fused=True, seed=seed + i,
-                      n_startup_trials=n_startup_trials,
-                      n_restarts=n_restarts, mso_options=replace(o),
-                      pad_multiple=pad_multiple,
-                      gp_fit_restarts=gp_fit_restarts,
-                      posterior_backend=backend,
-                      refit_interval=refit_interval,
-                      warm_start=warm_start,
-                      ).attach_fleet(self.fleet, study_id=i)
-            for i, sp in enumerate(spaces)]
+                              ftol=o.ftol, maxls=o.maxls),
+            max_studies=max_studies, max_queue=max_queue,
+            max_blocks=max_blocks, admission_timeout=admission_timeout,
+            quarantine_retries=quarantine_retries), mesh=mesh,
+            journal=self.journal, fault_injector=fault_injector)
+        self.fleet.on_quarantine = self._on_quarantine
+        self.samplers: List[GPSampler] = []
+        for i, sp in enumerate(spaces):
+            s = GPSampler(sp, strategy="dbe_vec", fused=True, seed=seed + i,
+                          n_startup_trials=n_startup_trials,
+                          n_restarts=n_restarts, mso_options=replace(o),
+                          pad_multiple=pad_multiple,
+                          gp_fit_restarts=gp_fit_restarts,
+                          posterior_backend=backend,
+                          refit_interval=refit_interval,
+                          warm_start=warm_start)
+            try:
+                s.attach_fleet(self.fleet, study_id=i)
+            except FleetFullError as e:
+                if not degrade_to_solo:
+                    raise
+                s.degraded = str(e)       # solo from birth (load shed)
+            self.samplers.append(s)
 
     def __len__(self) -> int:
         return len(self.samplers)
 
+    def _append(self, rec: dict) -> None:
+        if self.journal is not None:
+            self.journal.append(rec)
+
+    def _on_quarantine(self, sid, tag, reason) -> None:
+        if tag is not None:
+            self.samplers[sid].mark_quarantined(tag, reason)
+
     def ask_all(self) -> List[Trial]:
         """One fleet trial boundary: enqueue every study's suggest, run
         ONE batched step, collect per-study trials (startup studies
-        sample randomly and skip the batch)."""
+        sample randomly and skip the batch; degraded studies run their
+        solo engine).  Every ask is journaled (WAL) before the trial is
+        handed back."""
         for s in self.samplers:
-            s.prefetch_suggest()
+            if s._fleet is not None:
+                s.prefetch_suggest()
         self.fleet.step()
-        return [s.ask() for s in self.samplers]
+        out = []
+        for i, s in enumerate(self.samplers):
+            n_done = sum(t.state == "complete" for t in s.trials)
+            startup = n_done < s.n_startup
+            t = s.ask()
+            self._append({"op": "ask", "study": i, "trial": t.trial_id,
+                          "x": t.x.tolist(), "startup": startup})
+            out.append(t)
+        return out
 
-    def tell(self, study: int, trial_id: int, y: float, **kw) -> None:
-        self.samplers[study].tell(trial_id, y, **kw)
+    def tell(self, study: int, trial_id: int, y: float, *,
+             failed: bool = False, error: Optional[str] = None) -> None:
+        if not failed and not np.isfinite(float(y)):
+            # validate BEFORE journaling: a poison value must never be
+            # acknowledged into the WAL
+            raise ValueError(
+                f"study {study} trial {trial_id}: non-finite objective "
+                f"value y={y!r}; report evaluation failures with "
+                f"failed=True — they never enter GP data")
+        self._append({"op": "tell", "study": study, "trial": trial_id,
+                      "y": None if failed else float(y), "failed": failed,
+                      "error": error})
+        self.samplers[study].tell(trial_id, y, failed=failed, error=error)
 
     def optimize(self, objectives, n_rounds: int) -> List[Trial]:
         """Run ``n_rounds`` synchronized ask/tell rounds; ``objectives``
         is one callable (shared) or one per study.  Returns per-study
-        best trials."""
+        best trials.  If :meth:`install_drain_handler` armed a
+        preemption flag, a SIGTERM finishes the in-flight round, then
+        drains (checkpoint + journal + clean close) and stops early."""
         if callable(objectives):
             objectives = [objectives] * len(self.samplers)
         for _ in range(n_rounds):
+            if self._preempt is not None and self._preempt.triggered:
+                self.drain()
+                break
             trials = self.ask_all()
-            for s, (smp, t) in enumerate(zip(self.samplers, trials)):
+            for s, t in enumerate(trials):
                 try:
-                    smp.tell(t.trial_id, objectives[s](t.x))
+                    y = objectives[s](t.x)
                 except Exception as e:   # noqa: BLE001 — trial isolation
-                    smp.tell(t.trial_id, 0.0, failed=True,
-                             error=f"{type(e).__name__}: {e}")
+                    self.tell(s, t.trial_id, 0.0, failed=True,
+                              error=f"{type(e).__name__}: {e}")
+                    continue
+                if np.isfinite(float(y)):
+                    self.tell(s, t.trial_id, y)
+                else:                    # degrade, don't crash the loop
+                    self.tell(s, t.trial_id, 0.0, failed=True,
+                              error=f"non-finite objective value {y!r}")
         return [s.best() for s in self.samplers]
 
+    # ------------------------------------------------- durability plane
+    def checkpoint(self) -> int:
+        """Snapshot every study's trial history (plus warm-start θ)
+        through the CheckpointManager — bounds how much journal
+        :meth:`recover` replays.  Returns the snapshot step, which IS
+        the journal seq watermark: records with ``seq >=`` it are
+        post-snapshot."""
+        if self.ckpt is None:
+            raise ValueError("checkpoint() needs journal_dir")
+        step = self.journal.seq
+        flat: Dict[str, np.ndarray] = {
+            "seq": np.asarray(step, np.int64),
+            "n_studies": np.asarray(len(self.samplers), np.int64),
+        }
+        for i, s in enumerate(self.samplers):
+            flat[f"s{i}/x"] = (np.stack([t.x for t in s.trials])
+                               if s.trials
+                               else np.zeros((0, s.space.dim)))
+            flat[f"s{i}/y"] = np.asarray(
+                [np.nan if t.y is None else t.y for t in s.trials],
+                np.float64)
+            flat[f"s{i}/state"] = np.asarray(
+                [_TRIAL_STATE[t.state] for t in s.trials], np.int64)
+            flat[f"s{i}/error_json"] = np.asarray(
+                json.dumps([t.error for t in s.trials]))
+            flat[f"s{i}/n_startup_asks"] = np.asarray(
+                s._n_startup_asks, np.int64)
+            if s._fleet is not None:
+                th = self.fleet.study_theta(s._fleet_sid)
+                if th is not None:
+                    flat[f"s{i}/theta"] = th
+        self.ckpt.save_flat(step, flat)
+        self._append({"op": "snapshot", "step": step})
+        return step
+
+    def install_drain_handler(self):
+        """Arm SIGTERM/SIGUSR1 → returns the
+        :class:`~repro.ckpt.manager.PreemptionFlag`.  :meth:`optimize`
+        polls it at round boundaries; external drivers poll
+        ``flag.triggered`` and call :meth:`drain` themselves."""
+        self._preempt = install_sigterm_handler()
+        return self._preempt
+
+    def drain(self) -> dict:
+        """Graceful shutdown: serve the suggests already enqueued
+        (finish in-flight work, admit nothing new), checkpoint the full
+        study state, journal a drain record, close the journal.  After
+        ``drain()`` the journal directory is a complete, recoverable
+        image of the fleet."""
+        served = self.fleet.step()
+        step = None
+        if self.ckpt is not None:
+            step = self.checkpoint()
+        if self.journal is not None:
+            self._append({"op": "drain", "served": served,
+                          "snapshot": step})
+            self.journal.close()
+        return {"served": served, "snapshot_step": step}
+
+    @classmethod
+    def recover(cls, journal_dir: str, *, mesh=None, fault_injector=None
+                ) -> Tuple["FleetSampler", RecoveryReport]:
+        """Reconstruct a crashed/drained fleet from its journal directory.
+
+        The config record rebuilds the fleet; the newest valid snapshot
+        restores bulk trial state (burning one rng draw per recorded
+        startup ask so the random streams realign); the journal tail
+        past the snapshot replays through the NORMAL paths — tells
+        re-enter via the standard out-of-order sync at the next
+        prefetch, studies re-admit through the slot scheduler, and
+        device factors are rebuilt by the first post-recovery full
+        refit, exactly like a post-migration suggest — so recovery adds
+        NO new compiled programs.  Trials that were asked but never told
+        stay pending and are listed in the report for the driver to
+        re-evaluate."""
+        t0 = time.perf_counter()
+        journal = StudyJournal(journal_dir, fault_injector=fault_injector)
+        records = journal.replay()
+        if not records or records[0].get("op") != "config":
+            journal.close()
+            raise ValueError(
+                f"journal at {journal_dir!r} has no config record — "
+                f"nothing to recover")
+        cfg = records[0]
+        spaces = [BoxSpace(np.asarray(lo), np.asarray(up))
+                  for lo, up in zip(cfg["lower"], cfg["upper"])]
+        fs = cls(spaces, mesh=mesh, fault_injector=fault_injector,
+                 _journal=journal, mso_options=MsoOptions(**cfg["mso"]),
+                 **{k: cfg[k] for k in (
+                     "seed", "slots", "n_startup_trials", "n_restarts",
+                     "pad_multiple", "gp_fit_restarts",
+                     "posterior_backend", "refit_interval", "warm_start",
+                     "max_studies", "max_queue", "max_blocks",
+                     "admission_timeout", "quarantine_retries",
+                     "degrade_to_solo")})
+        # ---- snapshot: bulk state, bounding the replay length
+        snap_seq, snap_step = 0, None
+        if fs.ckpt is not None:
+            snap_step = fs.ckpt.latest_step()
+        if snap_step is not None:
+            flat = fs.ckpt.load_flat(snap_step)
+            snap_seq = int(flat["seq"])
+            for i, s in enumerate(fs.samplers):
+                errors = json.loads(str(flat[f"s{i}/error_json"]))
+                xs, ys = flat[f"s{i}/x"], flat[f"s{i}/y"]
+                for j, code in enumerate(flat[f"s{i}/state"]):
+                    y = float(ys[j])
+                    s.trials.append(Trial(
+                        trial_id=j, x=np.asarray(xs[j]),
+                        y=None if np.isnan(y) else y,
+                        state=_TRIAL_STATE_INV[int(code)],
+                        error=errors[j]))
+                for _ in range(int(flat[f"s{i}/n_startup_asks"])):
+                    s.space.sample(s.rng, 1)      # realign the stream
+                s._n_startup_asks = int(flat[f"s{i}/n_startup_asks"])
+                if f"s{i}/theta" in flat and s._fleet is not None:
+                    fs.fleet.restore_theta(s._fleet_sid,
+                                           flat[f"s{i}/theta"])
+        # ---- replay the journal tail through the normal paths
+        n_replayed = 0
+        for rec in records:
+            if rec["seq"] < snap_seq:
+                continue
+            n_replayed += 1
+            op = rec["op"]
+            if op == "ask":
+                s = fs.samplers[rec["study"]]
+                assert rec["trial"] == len(s.trials), (
+                    f"journal gap: study {rec['study']} ask for trial "
+                    f"{rec['trial']} but only {len(s.trials)} known")
+                if rec["startup"]:
+                    s.space.sample(s.rng, 1)      # burn: realign stream
+                    s._n_startup_asks += 1
+                s.trials.append(Trial(trial_id=rec["trial"],
+                                      x=np.asarray(rec["x"])))
+            elif op == "tell":
+                s = fs.samplers[rec["study"]]
+                s.tell(rec["trial"], 0.0 if rec["failed"] else rec["y"],
+                       failed=rec["failed"], error=rec.get("error"))
+            elif op == "refit":
+                s = fs.samplers[rec["sid"]]
+                if s._fleet is not None:
+                    fs.fleet.restore_theta(s._fleet_sid,
+                                           np.asarray(rec["theta"]))
+            elif op == "quarantine":
+                s = fs.samplers[rec["sid"]]
+                if rec.get("trial") is not None:
+                    s.mark_quarantined(rec["trial"], rec["reason"])
+            elif op in ("shed", "park"):
+                s = fs.samplers[rec["sid"]]
+                if s._fleet is not None:
+                    fs.fleet.shed_study(s._fleet_sid, rec["reason"])
+                    s._detach_fleet(rec["reason"])
+            # config/snapshot/admit/migrate/reject/drain: informational
+        pending = [(i, t.trial_id) for i, s in enumerate(fs.samplers)
+                   for t in s.trials if t.state == "pending"]
+        report = RecoveryReport(
+            snapshot_step=snap_step, n_records=len(records),
+            n_replayed=n_replayed,
+            truncated_bytes=journal.truncated_bytes, pending=pending,
+            replay_ms=1e3 * (time.perf_counter() - t0))
+        return fs, report
+
     def stats_snapshot(self) -> dict:
-        return {**self.engine.stats_snapshot(),
+        snap = {**self.engine.stats_snapshot(),
                 **self.fleet.stats_snapshot()}
+        snap["n_degraded"] = sum(s.degraded is not None
+                                 for s in self.samplers)
+        if self.journal is not None:
+            snap["journal_seq"] = self.journal.seq
+        return snap

@@ -17,6 +17,8 @@ import re
 import signal
 import threading
 import time
+import warnings
+import zipfile
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -43,6 +45,13 @@ def _unflatten_into(template, flat: Dict[str, np.ndarray]):
             raise ValueError(
                 f"shape mismatch at {key}: ckpt {val.shape} vs "
                 f"template {leaf.shape}")
+        if val.dtype != np.asarray(leaf).dtype:
+            # a silent downcast (f64 ckpt into an f32 template or vice
+            # versa) corrupts bit-exactness guarantees downstream —
+            # refuse, like a shape mismatch
+            raise ValueError(
+                f"dtype mismatch at {key}: ckpt {val.dtype} vs "
+                f"template {np.asarray(leaf).dtype}")
         leaves.append(val)
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
@@ -56,6 +65,14 @@ class CheckpointManager:
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
         self._lock = threading.Lock()
+        # a crash mid-save leaves a .tmp_* behind (the os.replace never
+        # ran); it is garbage by construction — sweep it on init
+        for f in os.listdir(directory):
+            if f.startswith(".tmp_"):
+                try:
+                    os.remove(os.path.join(directory, f))
+                except OSError:
+                    pass
 
     # ------------------------------------------------------------- paths
     def _path(self, step: int) -> str:
@@ -69,9 +86,25 @@ class CheckpointManager:
                 out.append(int(m.group(1)))
         return sorted(out)
 
+    def _is_valid(self, step: int) -> bool:
+        """A checkpoint counts only if its zip container is intact (a
+        torn write that somehow survived, a truncated copy, bit rot)."""
+        try:
+            with np.load(self._path(step)) as z:
+                z.files
+            return True
+        except (OSError, ValueError, zipfile.BadZipFile, EOFError):
+            return False
+
     def latest_step(self) -> Optional[int]:
-        steps = self.all_steps()
-        return steps[-1] if steps else None
+        """Newest *restorable* step: corrupt/partial checkpoints are
+        skipped with a warning instead of poisoning recovery."""
+        for step in reversed(self.all_steps()):
+            if self._is_valid(step):
+                return step
+            warnings.warn(f"skipping corrupt checkpoint "
+                          f"{self._path(step)}")
+        return None
 
     # -------------------------------------------------------------- save
     def save(self, step: int, tree, *, block: bool = False):
@@ -103,6 +136,22 @@ class CheckpointManager:
                 os.remove(self._path(s))
             except OSError:
                 pass
+
+    # ------------------------------------------------------- flat dicts
+    def save_flat(self, step: int, flat: Dict[str, np.ndarray]) -> None:
+        """Synchronously save a flat ``{name: array}`` dict (no pytree
+        template needed to load it back — the study-journal snapshot
+        path, where recovery has no template until the state is read)."""
+        self.wait()
+        tmp = os.path.join(self.dir, f".tmp_{step}_{os.getpid()}")
+        with open(tmp, "wb") as f:
+            np.savez(f, **{k: np.asarray(v) for k, v in flat.items()})
+        os.replace(tmp, self._path(step))
+        self._gc()
+
+    def load_flat(self, step: int) -> Dict[str, np.ndarray]:
+        with np.load(self._path(step)) as z:
+            return {k: z[k] for k in z.files}
 
     # ----------------------------------------------------------- restore
     def restore(self, step: int, template, *, shardings=None):

@@ -26,7 +26,8 @@ from repro.engine.posterior import (BACKENDS, fused_logei_acq, posterior,
 # ask needs it).  PEP 562 lazy export defers them until first attribute
 # access, by which point every layer is fully initialized.
 _ASK_EXPORTS = ("AskConfig", "AskEngine", "SuggestInfo")
-_FLEET_EXPORTS = ("FleetConfig", "FleetEngine")
+_FLEET_EXPORTS = ("FleetConfig", "FleetEngine", "FleetFullError",
+                  "FleetStudyError")
 
 
 def __getattr__(name):
@@ -42,6 +43,6 @@ def __getattr__(name):
 __all__ = [
     "AskConfig", "AskEngine", "BACKENDS", "BatchEvalFn", "CountingJit",
     "EngineStats", "EvalEngine", "EvalPlan", "FleetConfig", "FleetEngine",
-    "SuggestInfo", "bucket_ladder", "default_engine", "fused_logei_acq",
-    "posterior", "resolve_backend",
+    "FleetFullError", "FleetStudyError", "SuggestInfo", "bucket_ladder",
+    "default_engine", "fused_logei_acq", "posterior", "resolve_backend",
 ]

@@ -143,9 +143,13 @@ def restart_points(key, x, y_std, valid, n_restarts: int):
 class AskEngine:
     """Fused ask(): observe() appends, suggest() runs one device program."""
 
-    def __init__(self, engine: EvalEngine, cfg: AskConfig):
+    def __init__(self, engine: EvalEngine, cfg: AskConfig,
+                 fault_injector=None):
         self.engine = engine
         self.cfg = cfg
+        # chaos hook (tests/faults.py): may veto the incremental-update
+        # ok flag to force the full-refit fallback deterministically
+        self.fault_injector = fault_injector
         self._plan = EvalPlan.for_batch(cfg.n_restarts, cfg.dim)
         self._fit_opts = FIT_OPTS._replace(maxiter=cfg.gp_fit_maxiter)
         self._full_jit = CountingJit(self._full_impl)
@@ -225,12 +229,17 @@ class AskEngine:
             best_x, chol, alpha, kinv, ok, stats = self._incr_jit(
                 key, self._x, self._y, n_valid,
                 self._theta, self._chol, self._kinv)
-            if bool(ok):
+            ok = bool(ok)
+            if self.fault_injector is not None:
+                ok = bool(self.fault_injector.incr_ok(
+                    np.asarray([ok]), [None])[0])
+            if ok:
                 self._chol, self._alpha, self._kinv = chol, alpha, kinv
                 self._since_refit += 1
                 self.n_incremental += 1
             else:                     # exactness fallback: refit for real
                 self.n_fallbacks += 1
+                self.engine.record_refit_fallback()
                 incremental = False
                 kind = "fallback"
 

@@ -57,6 +57,7 @@ class EngineStats:
     n_rounds: int = 0            # host-facing batched evaluation rounds
     n_points: int = 0            # live points evaluated (excl. padding)
     n_padded: int = 0            # padded rows evaluated and discarded
+    n_refit_fallbacks: int = 0   # incremental refits demoted to full
     bucket_rounds: Dict[int, int] = field(default_factory=dict)
 
     def snapshot(self, engine: "EvalEngine") -> Dict[str, Any]:
@@ -67,6 +68,7 @@ class EngineStats:
             "n_rounds": self.n_rounds,
             "n_points": self.n_points,
             "n_padded": self.n_padded,
+            "n_refit_fallbacks": self.n_refit_fallbacks,
             "bucket_rounds": dict(self.bucket_rounds),
         }
 
@@ -157,6 +159,13 @@ class EvalEngine:
         self.stats.n_padded += rounds * B - evals
         self.stats.bucket_rounds[B] = \
             self.stats.bucket_rounds.get(B, 0) + rounds
+
+    def record_refit_fallback(self) -> None:
+        """An incremental (rank-one) refit failed its Schur-complement
+        soundness check and was demoted to a full MAP refit — the
+        exactness guardrail firing, tracked like evaluation economy.
+        Called by ``AskEngine.suggest`` and the fleet's step loop."""
+        self.stats.n_refit_fallbacks += 1
 
     # --------------------------------------------------------------- host
     def evaluator(self, state, plan: EvalPlan) -> BatchEvalFn:

@@ -56,9 +56,10 @@ on per-device occupancy).
 """
 from __future__ import annotations
 
+import time
 import zlib
 from dataclasses import dataclass
-from typing import Dict, Hashable, List, Optional, Tuple
+from typing import Callable, Dict, Hashable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -80,6 +81,20 @@ from repro.gp.gpr import GPState
 Array = jax.Array
 
 
+class FleetFullError(RuntimeError):
+    """Admission rejected: the fleet is at its configured capacity
+    (``max_studies`` / ``max_queue``).  Callers either surface the
+    rejection or degrade to the solo :class:`~repro.engine.ask.AskEngine`
+    path (see ``FleetSampler(degrade=...)``)."""
+
+
+class FleetStudyError(RuntimeError):
+    """A study left the fleet (load-shed past its admission deadline, or
+    parked after exhausting quarantine retries).  Sync callers get it
+    raised; async callers receive the instance through the result
+    mailbox (``pop_result``) in place of a suggestion."""
+
+
 @dataclass(frozen=True)
 class FleetConfig:
     """Static description of one fleet ask plane (everything here is baked
@@ -95,6 +110,13 @@ class FleetConfig:
     gp_fit_restarts: int = 2
     gp_fit_maxiter: int = 60
     mso: LbfgsbOptions = _MSO_DEFAULT
+    # robustness knobs — all host-side scheduling/retry policy; none is
+    # baked into a compiled program, so changing them never retraces
+    max_studies: Optional[int] = None    # live-study cap (admission gate)
+    max_queue: Optional[int] = None      # registration-queue cap
+    max_blocks: Optional[int] = None     # slot-block cap (device memory)
+    admission_timeout: Optional[float] = None   # seconds queued → shed
+    quarantine_retries: int = 2          # bad-refit retries before parking
 
     def __post_init__(self):
         if self.slots < 1:
@@ -103,6 +125,8 @@ class FleetConfig:
             raise ValueError("refit_interval must be >= 1")
         if self.n_restarts < 2:
             raise ValueError("n_restarts must be >= 2")
+        if self.quarantine_retries < 0:
+            raise ValueError("quarantine_retries must be >= 0")
 
 
 class _Study:
@@ -110,14 +134,16 @@ class _Study:
     admission/migration compaction), slot assignment, refit bookkeeping,
     and the pending-request/result mailbox."""
 
-    __slots__ = ("sid", "xs", "ys", "block", "slot", "n_fit",
+    __slots__ = ("sid", "xs", "ys", "tags", "block", "slot", "n_fit",
                  "since_refit", "has_factor", "has_theta", "theta_host",
-                 "trial", "pending", "result", "from_device")
+                 "trial", "pending", "result", "from_device", "deadline",
+                 "shed", "parked")
 
     def __init__(self, sid: Hashable):
         self.sid = sid
         self.xs: List[np.ndarray] = []
         self.ys: List[float] = []
+        self.tags: List[Optional[Hashable]] = []   # caller trial ids
         self.block: Optional["_Block"] = None
         self.slot = -1
         self.from_device: Optional[int] = None   # device before migration
@@ -128,7 +154,10 @@ class _Study:
         self.theta_host: Optional[np.ndarray] = None   # carried on migration
         self.trial = 0                   # suggest counter (default PRNG)
         self.pending: Optional[Tuple[Array, int]] = None  # (key, fit_seed)
-        self.result: Optional[Tuple[np.ndarray, SuggestInfo]] = None
+        self.result = None  # (x, SuggestInfo) | FleetStudyError | None
+        self.deadline: Optional[float] = None    # admission deadline (mono)
+        self.shed: Optional[str] = None          # load-shed reason
+        self.parked: Optional[str] = None        # quarantine-parked reason
 
     @property
     def n(self) -> int:
@@ -223,10 +252,22 @@ class FleetEngine:
     """
 
     def __init__(self, engine: EvalEngine, cfg: FleetConfig,
-                 mesh: Optional[Mesh] = None):
+                 mesh: Optional[Mesh] = None, journal=None,
+                 fault_injector=None):
         self.engine = engine
         self.cfg = cfg
         self.mesh = mesh
+        # durability + chaos hooks (both host-side, both optional):
+        # ``journal`` duck-types StudyJournal.append (admission, migration,
+        # refit-θ, quarantine, shed records — the sampler journals
+        # asks/tells); ``fault_injector`` may override the incremental ok
+        # flags / full-refit health flags to force the fallback and
+        # quarantine paths deterministically (tests/faults.py)
+        self.journal = journal
+        self.fault_injector = fault_injector
+        # notified as (sid, trial_tag, reason) when an observation is
+        # quarantined — FleetSampler marks the owning Trial
+        self.on_quarantine: Optional[Callable] = None
         self._plan = EvalPlan.for_batch(cfg.n_restarts, cfg.dim)
         self._fit_opts = FIT_OPTS._replace(maxiter=cfg.gp_fit_maxiter)
         if mesh is None:
@@ -279,23 +320,71 @@ class FleetEngine:
         self.n_migrations = 0
         self.n_migrations_intra = 0      # re-admitted on the same device
         self.n_migrations_cross = 0      # ... on a different device
+        # robustness counters
+        self.n_rejected = 0              # admissions refused (fleet full)
+        self.n_shed = 0                  # queued studies past deadline
+        self.n_quarantined = 0           # observations dropped as poison
+        self.n_parked = 0                # studies retired by quarantine
+
+    def _journal(self, record: dict) -> None:
+        if self.journal is not None:
+            self.journal.append(record)
 
     # ----------------------------------------------------------- host api
-    def add_study(self, sid: Hashable) -> None:
+    def add_study(self, sid: Hashable,
+                  deadline: Optional[float] = None) -> None:
         """Register a study; it is admitted to a slot at the next trial
-        boundary (step) once it has observations."""
+        boundary (step) once it has observations.
+
+        Backpressure: raises :class:`FleetFullError` when the live-study
+        or registration-queue caps are hit.  ``deadline`` (absolute
+        ``time.monotonic()`` value, default now + ``admission_timeout``)
+        bounds how long the study may wait queued for a slot before being
+        load-shed."""
         if sid in self._studies:
             raise ValueError(f"study {sid!r} already registered")
+        cfg = self.cfg
+        live = sum(1 for s in self._studies.values()
+                   if s.shed is None and s.parked is None)
+        reason = None
+        if cfg.max_studies is not None and live >= cfg.max_studies:
+            reason = (f"fleet full: {live} live studies "
+                      f"(max_studies={cfg.max_studies})")
+        elif (cfg.max_queue is not None
+                and len(self._queue) >= cfg.max_queue):
+            reason = (f"admission queue full: {len(self._queue)} waiting "
+                      f"(max_queue={cfg.max_queue})")
+        if reason is not None:
+            self.n_rejected += 1
+            self._journal({"op": "reject", "sid": sid, "reason": reason})
+            raise FleetFullError(reason)
         st = _Study(sid)
+        if deadline is None and cfg.admission_timeout is not None:
+            deadline = time.monotonic() + cfg.admission_timeout
+        st.deadline = deadline
         self._studies[sid] = st
         self._queue.append(st)
 
-    def observe(self, sid: Hashable, x_unit, y: float) -> None:
-        """Append one observation (unit-cube x, raw minimized y)."""
+    def observe(self, sid: Hashable, x_unit, y: float,
+                tag: Optional[Hashable] = None) -> None:
+        """Append one observation (unit-cube x, raw minimized y).  ``tag``
+        is the caller's trial id, carried so a later quarantine can name
+        the offending trial.
+
+        Guardrail: non-finite values are refused here — one NaN in a slot
+        row would poison the stacked standardization/gram for the whole
+        block and stall the shared lockstep ``while_loop``s."""
         st = self._studies[sid]
         x_unit = np.asarray(x_unit, np.float64).reshape(self.cfg.dim)
+        y = float(y)
+        if not (np.all(np.isfinite(x_unit)) and np.isfinite(y)):
+            raise ValueError(
+                f"study {sid!r}: non-finite observation "
+                f"(trial {tag!r}, y={y!r}) — report evaluation failures "
+                f"with failed=True; they must never reach GP data")
         st.xs.append(x_unit)
-        st.ys.append(float(y))
+        st.ys.append(y)
+        st.tags.append(tag)
         blk = st.block
         if blk is None:
             return
@@ -304,6 +393,7 @@ class FleetEngine:
             # larger block) at the next trial boundary
             self._evict(st)
             self.n_migrations += 1
+            self._journal({"op": "migrate", "sid": sid, "n": st.n})
         else:
             i = st.n - 1
             blk.x = blk._pin(blk.x.at[st.slot, i].set(
@@ -317,6 +407,11 @@ class FleetEngine:
         to the fleet's per-study stream ``fold_in(fold_in(base,
         study), trial)``; ``fit_seed`` to the trial counter."""
         st = self._studies[sid]
+        if st.shed is not None or st.parked is not None:
+            state = "shed" if st.shed is not None else "parked"
+            raise FleetStudyError(
+                f"study {sid!r} left the fleet ({state}): "
+                f"{st.shed or st.parked}")
         if st.pending is not None or st.result is not None:
             return
         if key is None:
@@ -345,7 +440,37 @@ class FleetEngine:
         self.step()
         res = self.pop_result(sid)
         assert res is not None
+        if isinstance(res, FleetStudyError):
+            raise res
         return res
+
+    def study_theta(self, sid: Hashable) -> Optional[np.ndarray]:
+        """The study's last fully-refit θ (for snapshots), or None if no
+        full refit has committed yet."""
+        st = self._studies[sid]
+        if st.block is not None and st.has_theta:
+            return np.asarray(st.block.theta[st.slot])
+        return None if not st.has_theta else st.theta_host
+
+    def restore_theta(self, sid: Hashable, theta) -> None:
+        """Re-seed a (not yet admitted) study's warm-start θ — the
+        recovery path replays journaled full-refit θs through here so a
+        post-recovery warm-started refit matches the uninterrupted run
+        bit-for-bit (same mechanism as the migration theta_host carry)."""
+        st = self._studies[sid]
+        st.theta_host = np.asarray(theta, np.float64)
+        st.has_theta = True
+
+    def study_state(self, sid: Hashable) -> Tuple[str, Optional[str]]:
+        """(state, reason): ``live`` / ``queued`` with reason None, or
+        ``shed`` / ``parked`` with the recorded reason — callers poll this
+        to decide when to degrade to the solo path."""
+        st = self._studies[sid]
+        if st.parked is not None:
+            return "parked", st.parked
+        if st.shed is not None:
+            return "shed", st.shed
+        return ("live", None) if st.block is not None else ("queued", None)
 
     def step(self) -> int:
         """One trial boundary: admit queued studies, then run one fused
@@ -378,6 +503,10 @@ class FleetEngine:
             "n_migrations": self.n_migrations,
             "n_migrations_intra": self.n_migrations_intra,
             "n_migrations_cross": self.n_migrations_cross,
+            "n_rejected": self.n_rejected,
+            "n_shed": self.n_shed,
+            "n_quarantined": self.n_quarantined,
+            "n_parked": self.n_parked,
             "n_devices": self._ndev,
             "slots_per_device": self._device_occupancy(),
             "queue_depth": len(self._queue),
@@ -421,13 +550,26 @@ class FleetEngine:
 
     def _admit(self) -> None:
         still: List[_Study] = []
+        now = time.monotonic()
         for st in self._queue:
+            if st.shed is not None or st.parked is not None:
+                continue                 # left the fleet while queued
             if st.n < 1:                 # nothing to pad yet: stay queued
                 still.append(st)
                 continue
             bucket = pad_bucket_for(st.n, self.cfg.pad_bucket)
             pick = self._pick_slot(bucket)
             if pick is None:
+                if (self.cfg.max_blocks is not None
+                        and len(self._blocks) >= self.cfg.max_blocks):
+                    # no slot and no room to grow: shed waiters past
+                    # their admission deadline, keep the rest queued
+                    if st.deadline is not None and now > st.deadline:
+                        self._shed(st, "admission deadline exceeded "
+                                   f"({len(self._blocks)} blocks full)")
+                    else:
+                        still.append(st)
+                    continue
                 blk = _Block(self.cfg, bucket, self._dtype,
                              self._slot_sharding, self._slots_total)
                 self._blocks.append(blk)
@@ -439,6 +581,24 @@ class FleetEngine:
             self._install(st, blk, slot)
             self.n_admissions += 1
         self._queue = still
+
+    def _shed(self, st: _Study, reason: str) -> None:
+        """Load-shed a queued study (never one holding a slot): it stops
+        being schedulable; the owning sampler degrades to the solo path
+        when it sees the state (``study_state``)."""
+        st.shed = reason
+        st.pending = None
+        self.n_shed += 1
+        self._journal({"op": "shed", "sid": st.sid, "reason": reason})
+
+    def shed_study(self, sid: Hashable, reason: str) -> None:
+        """Mark a registered study as load-shed (journal-replay path:
+        recovery re-applies shed records through here)."""
+        st = self._studies[sid]
+        if st.block is not None:
+            self._clear_slot(st)
+        if st.shed is None:
+            self._shed(st, reason)
 
     def _install(self, st: _Study, blk: _Block, slot: int) -> None:
         """Host-side state compaction: copy the study's live observations
@@ -459,6 +619,8 @@ class FleetEngine:
                 jnp.asarray(st.theta_host, blk.theta.dtype)))
         blk.studies[slot] = st
         st.block, st.slot = blk, slot
+        self._journal({"op": "admit", "sid": st.sid,
+                       "bucket": blk.bucket, "slot": slot, "n": n})
         if st.from_device is not None:       # bucket-growth re-admission
             if self._slot_device(slot) == st.from_device:
                 self.n_migrations_intra += 1
@@ -466,9 +628,10 @@ class FleetEngine:
                 self.n_migrations_cross += 1
             st.from_device = None
 
-    def _evict(self, st: _Study) -> None:
-        """Free the study's slot (bucket migration): save θ for the warm
-        start, reset the row to the benign idle pattern, re-queue."""
+    def _clear_slot(self, st: _Study) -> None:
+        """Free the study's slot: save θ for a warm start, reset the row
+        to the benign idle pattern (the _FAR invariant holds for every
+        non-live slot, whatever removed its study)."""
         blk, s = st.block, st.slot
         if st.has_theta:
             st.theta_host = np.asarray(blk.theta[s])
@@ -487,7 +650,49 @@ class FleetEngine:
         st.block, st.slot = None, -1
         st.from_device = self._slot_device(s)
         st.has_factor = False            # the factor dies with the bucket
+
+    def _evict(self, st: _Study) -> None:
+        """Bucket migration: free the slot and re-queue for re-admission
+        (compacted) into a larger block."""
+        self._clear_slot(st)
         self._queue.append(st)
+
+    def _park(self, st: _Study, reason: str) -> None:
+        """Retire a study the fleet cannot serve (quarantine retries
+        exhausted, or too few clean observations left): free its slot and
+        fail the pending request through the result mailbox."""
+        if st.block is not None:
+            self._clear_slot(st)
+        st.parked = reason
+        st.pending = None
+        st.result = FleetStudyError(f"study {st.sid!r} parked: {reason}")
+        self.n_parked += 1
+        self._journal({"op": "park", "sid": st.sid, "reason": reason})
+
+    def _quarantine_newest(self, st: _Study, reason: str) -> None:
+        """Drop the study's newest observation from GP data with a
+        recorded reason (WAL first), resetting its slot row entry to the
+        benign idle value; park the study if too few clean observations
+        remain."""
+        k = st.n - 1
+        x_bad, y_bad = st.xs.pop(), st.ys.pop()
+        tag = st.tags.pop()
+        blk, s = st.block, st.slot
+        if blk is not None:
+            dt = blk.x.dtype
+            blk.x = blk._pin(blk.x.at[s, k].set(
+                jnp.asarray(blk.idle_x[k], dt)))
+            blk.y = blk._pin(blk.y.at[s, k].set(jnp.asarray(0.0, dt)))
+        st.n_fit = min(st.n_fit, st.n)
+        st.has_factor = False        # the factor summed the dropped row
+        self.n_quarantined += 1
+        self._journal({"op": "quarantine", "sid": st.sid, "trial": tag,
+                       "x": x_bad.tolist(), "y": y_bad, "reason": reason})
+        if self.on_quarantine is not None:
+            self.on_quarantine(st.sid, tag, reason)
+        if st.n < 2 and st.block is not None:
+            self._park(st, f"only {st.n} clean observations "
+                       f"after quarantine")
 
     def _step_block(self, blk: _Block) -> int:
         cfg = self.cfg
@@ -502,6 +707,7 @@ class FleetEngine:
                                  f">= 2 observations, have {st.n}")
         S = self._slots_total
         nv = jnp.asarray(blk.n_valid())
+        sids = [None if s is None else s.sid for s in blk.studies]
 
         # refit_interval=k ⇒ a full MAP refit every k-th suggest (per
         # slot; k=1 disables incremental updates) — same predicate as
@@ -523,6 +729,8 @@ class FleetEngine:
                 blk.kinv, jnp.asarray(do_incr))
             blk.chol, blk.alpha, blk.kinv = chol, alpha, kinv
             ok = np.asarray(ok)
+            if self.fault_injector is not None:
+                ok = self.fault_injector.incr_ok(ok, sids)
             for s, st in req:
                 if not do_incr[s]:
                     continue
@@ -532,41 +740,86 @@ class FleetEngine:
                 else:                    # exactness fallback: refit for real
                     kind[s] = "fallback"
                     self.n_fallbacks += 1
+                    self.engine.record_refit_fallback()
 
         full_slots = [s for s, _ in req if kind[s] != "incremental"]
         if full_slots:
             dt = blk.x.dtype
             R = cfg.gp_fit_restarts
-            theta_host = np.asarray(blk.theta)      # warm-start inits
-            rows = []
-            for s in range(S):
-                st = blk.studies[s]
-                if s in kind and kind[s] != "incremental":
-                    init = None
-                    if cfg.warm_start and st.has_theta:
-                        init = unpack_theta(
-                            jnp.asarray(theta_host[s], dt), cfg.dim)
-                    rows.append(theta_init_grid(
-                        cfg.dim, dt, R, st.pending[1], init=init))
-                else:                    # masked-out slot: benign inits
-                    rows.append(theta_init_grid(cfg.dim, dt, R, 0))
-            thetas = jnp.stack(rows)                # (S, R, P)
+            # ONE warm-start snapshot for the whole retry loop: a retry
+            # must not warm-start from the unhealthy θ it is retrying
+            theta_host = np.asarray(blk.theta)
             tlo, tup = theta_bounds(cfg.dim, dt)
-            do_full = np.zeros((S,), bool)
-            do_full[full_slots] = True
-            theta, chol, alpha, kinv = self._full_jit(
-                blk.x, blk.y, nv, thetas,
-                jnp.broadcast_to(tlo, thetas.shape),
-                jnp.broadcast_to(tup, thetas.shape),
-                jnp.asarray(do_full), blk.theta, blk.chol, blk.alpha,
-                blk.kinv)
-            blk.theta, blk.chol, blk.alpha, blk.kinv = \
-                theta, chol, alpha, kinv
-            for s in full_slots:
-                st = blk.studies[s]
-                st.since_refit = 0
-                st.has_theta = True
-                self.n_full_refits += 1
+            pending_full = list(full_slots)
+            for attempt in range(cfg.quarantine_retries + 1):
+                pf = set(pending_full)
+                rows = []
+                for s in range(S):
+                    st = blk.studies[s]
+                    if s in pf:
+                        init = None
+                        if cfg.warm_start and st.has_theta:
+                            init = unpack_theta(
+                                jnp.asarray(theta_host[s], dt), cfg.dim)
+                        rows.append(theta_init_grid(
+                            cfg.dim, dt, R, st.pending[1], init=init))
+                    else:                # masked-out slot: benign inits
+                        rows.append(theta_init_grid(cfg.dim, dt, R, 0))
+                thetas = jnp.stack(rows)            # (S, R, P)
+                do_full = np.zeros((S,), bool)
+                do_full[pending_full] = True
+                nv = jnp.asarray(blk.n_valid())
+                theta, chol, alpha, kinv, okf = self._full_jit(
+                    blk.x, blk.y, nv, thetas,
+                    jnp.broadcast_to(tlo, thetas.shape),
+                    jnp.broadcast_to(tup, thetas.shape),
+                    jnp.asarray(do_full), blk.theta, blk.chol, blk.alpha,
+                    blk.kinv)
+                blk.theta, blk.chol, blk.alpha, blk.kinv = \
+                    theta, chol, alpha, kinv
+                okf = np.asarray(okf)
+                if self.fault_injector is not None:
+                    okf = self.fault_injector.full_ok(okf, sids)
+                bad = [s for s in pending_full if not okf[s]]
+                for s in pending_full:
+                    if okf[s]:
+                        st = blk.studies[s]
+                        st.since_refit = 0
+                        st.has_theta = True
+                        self.n_full_refits += 1
+                        if self.journal is not None:
+                            self._journal({
+                                "op": "refit", "sid": st.sid,
+                                "theta": np.asarray(
+                                    blk.theta[s]).tolist()})
+                if not bad:
+                    break
+                # quarantine: drop each unhealthy slot's newest
+                # observation (the likeliest poison) and refit just those
+                # slots — a pure data change (same shapes), so retries
+                # reuse the same compiled program
+                nxt = []
+                for s in bad:
+                    st = blk.studies[s]
+                    self._quarantine_newest(
+                        st, f"full refit unhealthy "
+                        f"(attempt {attempt + 1})")
+                    if st.block is None:     # parked mid-quarantine
+                        continue
+                    if attempt < cfg.quarantine_retries:
+                        nxt.append(s)
+                    else:
+                        self._park(st, "quarantine retries exhausted "
+                                   f"({cfg.quarantine_retries + 1} "
+                                   f"unhealthy refits)")
+                pending_full = nxt
+                if not pending_full:
+                    break
+            nv = jnp.asarray(blk.n_valid())
+            # parked studies dropped their requests mid-phase
+            req = [(s, st) for s, st in req if st.pending is not None]
+            if not req:
+                return 0
 
         keys = np.zeros((S, 2), np.uint32)
         for s, st in req:
@@ -602,7 +855,14 @@ class FleetEngine:
     def _full_impl(self, x, y, n_valid, thetas, tlo, tup, do_full,
                    theta_old, chol_old, alpha_old, kinv_old):
         """Vmapped full refit over the slot axis; ``do_full`` masks which
-        slots commit (the rest keep their previous state)."""
+        slots commit (the rest keep their previous state).
+
+        Also returns a per-slot health flag: a refit that produced
+        non-finite θ/α or a broken Cholesky (non-PD gram → NaN or
+        non-positive diagonal) must NOT be served — the unhealthy slot
+        keeps its previous (benign) state and the host quarantines the
+        likeliest poison observation and retries.  Masked-out slots are
+        vacuously healthy."""
         cfg = self.cfg
 
         def one(x_s, y_s, nv, th, lo, up):
@@ -613,14 +873,19 @@ class FleetEngine:
 
         theta_n, chol_n, alpha_n, kinv_n = jax.vmap(one)(
             x, y, n_valid, thetas, tlo, tup)
+        diag = jnp.diagonal(chol_n, axis1=-2, axis2=-1)
+        healthy = (jnp.all(jnp.isfinite(theta_n), axis=-1)
+                   & jnp.all(jnp.isfinite(alpha_n), axis=-1)
+                   & jnp.all(jnp.isfinite(diag) & (diag > 0.0), axis=-1))
+        ok = healthy | ~do_full
 
         def sel(new, old):
-            m = do_full.reshape((-1,) + (1,) * (new.ndim - 1))
+            m = (do_full & ok).reshape((-1,) + (1,) * (new.ndim - 1))
             return jnp.where(m, new, old)
 
         kinv = None if kinv_old is None else sel(kinv_n, kinv_old)
         return (sel(theta_n, theta_old), sel(chol_n, chol_old),
-                sel(alpha_n, alpha_old), kinv)
+                sel(alpha_n, alpha_old), kinv, ok)
 
     def _incr_impl(self, x, y, n_valid, theta, chol_old, alpha_old,
                    kinv_old, do_incr):

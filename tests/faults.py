@@ -1,0 +1,88 @@
+"""Deterministic fault injection for the fleet's robustness layer.
+
+The :class:`FaultInjector` duck-types the three chaos hooks the
+production code exposes (``StudyJournal``, ``FleetEngine``,
+``AskEngine`` all take a ``fault_injector=``):
+
+* ``should_kill(seq)`` — the journal calls this before each append; when
+  it fires, the journal writes a deliberately *partial* record (exactly
+  the on-disk state a real ``kill -9`` mid-append leaves), fsyncs it,
+  and raises :class:`repro.bo.journal.InjectedCrash`.
+* ``incr_ok(ok, sids)`` — veto the incremental rank-one update's health
+  flag, forcing the exactness fallback (full refit) deterministically.
+* ``full_ok(ok, sids)`` — mark a full MAP refit unhealthy, forcing the
+  quarantine → retry → park path deterministically.
+
+All hooks are host-side: an injector changes scheduling decisions, never
+traced code, so the compile-economy invariants must hold under chaos.
+
+The injector is deliberately one-shot / budgeted: a crash fires once
+(real processes die once), and the ok vetoes decrement per-study budgets
+so a test can script "study 1's next two full refits are unhealthy"
+exactly.  ``sids`` may contain ``None`` entries — idle fleet slots, or
+the solo ``AskEngine`` (which has no study id); budget vetoes keyed on
+``None`` target those.
+"""
+from typing import Dict, Hashable, Optional
+
+import numpy as np
+
+
+class FaultInjector:
+    """Scriptable chaos: journal kills + refit-health vetoes.
+
+    Parameters
+    ----------
+    kill_at_seq:
+        Journal sequence number at which to simulate a process kill
+        (one-shot: fires on the first append with ``seq >= kill_at_seq``
+        and then disarms, so a recovered run using the same injector
+        keeps running).
+    incr_fail:
+        ``{sid: budget}`` — veto up to ``budget`` healthy incremental
+        ``ok`` flags for that study (``None`` targets the solo
+        AskEngine / anonymous slots).
+    full_fail:
+        ``{sid: budget}`` — mark up to ``budget`` full refits for that
+        study unhealthy.
+    """
+
+    def __init__(self, *, kill_at_seq: Optional[int] = None,
+                 incr_fail: Optional[Dict[Hashable, int]] = None,
+                 full_fail: Optional[Dict[Hashable, int]] = None):
+        self.kill_at_seq = kill_at_seq
+        self.incr_fail = dict(incr_fail or {})
+        self.full_fail = dict(full_fail or {})
+        self.n_kills = 0
+        self.n_incr_vetoed = 0
+        self.n_full_vetoed = 0
+
+    # ------------------------------------------------------ journal hook
+    def should_kill(self, seq: int) -> bool:
+        if self.kill_at_seq is not None and seq >= self.kill_at_seq:
+            self.kill_at_seq = None          # one-shot: processes die once
+            self.n_kills += 1
+            return True
+        return False
+
+    # ------------------------------------------------- refit-health hooks
+    def _veto(self, budgets: Dict[Hashable, int], ok: np.ndarray,
+              sids) -> np.ndarray:
+        ok = np.array(ok)
+        for i, sid in enumerate(sids):
+            if ok[i] and budgets.get(sid, 0) > 0:
+                ok[i] = False
+                budgets[sid] -= 1
+        return ok
+
+    def incr_ok(self, ok, sids) -> np.ndarray:
+        before = int(np.sum(np.asarray(ok)))
+        out = self._veto(self.incr_fail, ok, sids)
+        self.n_incr_vetoed += before - int(np.sum(out))
+        return out
+
+    def full_ok(self, ok, sids) -> np.ndarray:
+        before = int(np.sum(np.asarray(ok)))
+        out = self._veto(self.full_fail, ok, sids)
+        self.n_full_vetoed += before - int(np.sum(out))
+        return out

@@ -1,0 +1,433 @@
+"""Fault-tolerance tests: journal durability semantics, checkpoint
+hygiene, crash-recovery determinism, quarantine / backpressure / drain
+behavior under deterministic fault injection (tests/faults.py), and the
+Schur-complement exactness fallback."""
+import json
+import os
+import signal
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from faults import FaultInjector
+from repro.bo.journal import InjectedCrash, StudyJournal
+from repro.bo.sampler import FleetSampler, GPSampler
+from repro.bo.space import BoxSpace
+from repro.ckpt.manager import CheckpointManager
+from repro.core.acquisition import logei_acq
+from repro.core.lbfgsb import LbfgsbOptions
+from repro.core.mso import MsoOptions
+from repro.engine import (AskConfig, AskEngine, EvalEngine, FleetConfig,
+                          FleetEngine, FleetFullError, FleetStudyError)
+from repro.gp.fit import incremental_update, standardize_masked
+from repro.gp.kernels import KernelParams, gram
+
+_MSO = MsoOptions(maxiter=40, pgtol=1e-2)
+
+
+def _sphere(x):
+    return float(np.sum((x - 0.4) ** 2))
+
+
+def _fleet_kw(**over):
+    kw = dict(n_startup_trials=4, n_restarts=4, pad_multiple=8, slots=4,
+              posterior_backend="xla", refit_interval=1, warm_start=False,
+              mso_options=MsoOptions(**vars(_MSO)))
+    kw.update(over)
+    return kw
+
+
+def _drive(fs, rounds):
+    for _ in range(rounds):
+        for i, t in enumerate(fs.ask_all()):
+            fs.tell(i, t.trial_id, _sphere(t.x))
+
+
+def _journal_records(d):
+    path = os.path.join(d, "journal.log")
+    return StudyJournal._scan_and_truncate(path, truncate=False)[0]
+
+
+# ============================================================ journal
+def test_journal_roundtrip_and_reopen(tmp_path):
+    d = str(tmp_path)
+    j = StudyJournal(d)
+    for i in range(5):
+        assert j.append({"op": "ask", "i": i}) == i
+    j.close()
+    with pytest.raises(ValueError, match="closed"):
+        j.append({"op": "ask"})
+    j2 = StudyJournal(d)                 # reopen continues the sequence
+    assert j2.seq == 5
+    assert j2.truncated_bytes == 0
+    assert j2.append({"op": "tell"}) == 5
+    recs = j2.replay()
+    assert [r["seq"] for r in recs] == list(range(6))
+    assert recs[3] == {"seq": 3, "op": "ask", "i": 3}
+    j2.close()
+
+
+def test_journal_truncates_torn_tail(tmp_path):
+    """A partial last line (crash mid-append) is dropped at open, and the
+    next append reuses its sequence number — the torn record must look
+    like it never happened."""
+    d = str(tmp_path)
+    j = StudyJournal(d)
+    for i in range(4):
+        j.append({"op": "ask", "i": i})
+    j.close()
+    with open(j.path, "ab") as f:        # torn write: no newline, half crc
+        f.write(b"deadbeef {\"seq\": 4, \"op\"")
+    with pytest.warns(UserWarning, match="dropping"):
+        j2 = StudyJournal(d)
+    assert j2.seq == 4 and j2.truncated_bytes > 0
+    assert j2.append({"op": "ask", "i": 4}) == 4
+    assert len(j2.replay()) == 5
+    j2.close()
+
+
+def test_journal_crc_corruption_truncates_from_there(tmp_path):
+    """A flipped byte mid-file invalidates that record AND everything
+    after it (a rewound sequence is indistinguishable from tampering)."""
+    d = str(tmp_path)
+    j = StudyJournal(d)
+    for i in range(6):
+        j.append({"op": "ask", "i": i})
+    j.close()
+    with open(j.path, "rb") as f:
+        lines = f.readlines()
+    lines[3] = lines[3].replace(b'"i":3', b'"i":9')   # payload vs crc
+    with open(j.path, "wb") as f:
+        f.writelines(lines)
+    with pytest.warns(UserWarning, match="dropping"):
+        j2 = StudyJournal(d)
+    assert j2.seq == 3                   # records 0..2 survive, 3..5 drop
+    assert [r["i"] for r in j2.replay()] == [0, 1, 2]
+    j2.close()
+
+
+def test_injected_crash_leaves_torn_record(tmp_path):
+    d = str(tmp_path)
+    j = StudyJournal(d, fault_injector=FaultInjector(kill_at_seq=2))
+    j.append({"op": "a"})
+    j.append({"op": "b"})
+    with pytest.raises(InjectedCrash):
+        j.append({"op": "c"})
+    with pytest.warns(UserWarning, match="dropping"):
+        j2 = StudyJournal(d)             # exactly a real kill's aftermath
+    assert j2.seq == 2 and j2.truncated_bytes > 0
+    j2.close()
+
+
+# ========================================================= checkpoints
+def test_ckpt_dtype_mismatch_refused(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(1, {"x": jnp.ones(3, jnp.float64)}, block=True)
+    with pytest.raises(ValueError, match="dtype mismatch"):
+        mgr.restore(1, {"x": jnp.ones(3, jnp.float32)})
+
+
+def test_ckpt_latest_step_skips_corrupt(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save_flat(1, {"x": np.ones(3)})
+    mgr.save_flat(2, {"x": np.ones(3)})
+    with open(mgr._path(2), "wb") as f:
+        f.write(b"not a zip archive")
+    with pytest.warns(UserWarning, match="corrupt"):
+        assert mgr.latest_step() == 1
+
+
+def test_ckpt_tmp_files_cleaned_on_init(tmp_path):
+    d = str(tmp_path)
+    leftover = os.path.join(d, ".tmp_7_999")
+    os.makedirs(d, exist_ok=True)
+    open(leftover, "w").write("dead writer")
+    CheckpointManager(d)
+    assert not os.path.exists(leftover)
+
+
+def test_ckpt_flat_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    flat = {"a": np.arange(6, dtype=np.float64).reshape(2, 3),
+            "b": np.asarray(7, np.int64),
+            "c": np.asarray(json.dumps(["x", None]))}
+    mgr.save_flat(3, flat)
+    out = mgr.load_flat(3)
+    np.testing.assert_array_equal(out["a"], flat["a"])
+    assert int(out["b"]) == 7
+    assert json.loads(str(out["c"])) == ["x", None]
+
+
+# ================================================== tell() guardrails
+def test_tell_nonfinite_raises_and_failed_never_enters_gp():
+    s = GPSampler(BoxSpace.cube(2, 0.0, 1.0), strategy="dbe_vec",
+                  n_startup_trials=4, seed=0)
+    t0, t1 = s.ask(), s.ask()
+    with pytest.raises(ValueError, match=rf"trial {t0.trial_id}.*failed"):
+        s.tell(t0.trial_id, float("nan"))
+    assert s.trials[t0.trial_id].state == "pending"   # refused, unchanged
+    s.tell(t0.trial_id, 1.0)
+    s.tell(t1.trial_id, float("inf"), failed=True, error="diverged")
+    X, y = s._observations()
+    assert X.shape[0] == 1 and np.all(np.isfinite(y))
+    assert s.trials[t1.trial_id].state == "failed"
+
+
+def test_fleet_tell_nonfinite_refused_before_journal(tmp_path):
+    d = str(tmp_path)
+    fs = FleetSampler([BoxSpace.cube(2, 0.0, 1.0)], journal_dir=d,
+                      **_fleet_kw())
+    t = fs.ask_all()[0]                  # startup: random, no compiles
+    with pytest.raises(ValueError, match="failed=True"):
+        fs.tell(0, t.trial_id, float("-inf"))
+    assert _journal_records(d)[-1]["op"] == "ask"     # never acknowledged
+    fs.tell(0, t.trial_id, 0.0, failed=True, error="boom")
+    last = _journal_records(d)[-1]
+    assert last["op"] == "tell" and last["failed"] and last["y"] is None
+    # the engine-level guardrail backs the sampler one up
+    with pytest.raises(ValueError, match="failed=True"):
+        fs.fleet.observe(0, np.full(2, 0.5), float("nan"), tag=9)
+
+
+# ================================================ backpressure / shed
+def test_admission_backpressure_rejects_with_reason():
+    eng = FleetEngine(EvalEngine(logei_acq),
+                      FleetConfig(dim=2, n_restarts=4, max_studies=1))
+    eng.add_study("a")
+    with pytest.raises(FleetFullError, match="max_studies=1"):
+        eng.add_study("b")
+    eng2 = FleetEngine(EvalEngine(logei_acq),
+                       FleetConfig(dim=2, n_restarts=4, max_queue=1))
+    eng2.add_study("a")
+    with pytest.raises(FleetFullError, match="queue full"):
+        eng2.add_study("b")
+    assert eng.stats_snapshot()["n_rejected"] == 1
+
+
+def test_fleet_sampler_degrades_to_solo_on_rejection():
+    sp = BoxSpace.cube(2, 0.0, 1.0)
+    with pytest.raises(FleetFullError):
+        FleetSampler([sp] * 3, max_studies=2, **_fleet_kw())
+    fs = FleetSampler([sp] * 3, max_studies=2, degrade_to_solo=True,
+                      **_fleet_kw())
+    assert len(fs) == 3
+    degraded = [s for s in fs.samplers if s.degraded is not None]
+    assert len(degraded) == 1 and degraded[0]._fleet is None
+    snap = fs.stats_snapshot()
+    assert snap["n_rejected"] == 1 and snap["n_degraded"] == 1
+
+
+def test_admission_deadline_load_shed():
+    eng = FleetEngine(EvalEngine(logei_acq),
+                      FleetConfig(dim=2, n_restarts=4, slots=2,
+                                  pad_bucket=8, max_blocks=1))
+    for sid in ("a", "b"):               # fill the only block's 2 slots
+        eng.add_study(sid)
+        eng.observe(sid, np.full(2, 0.5), 1.0)
+    eng.step()
+    eng.add_study("c", deadline=time.monotonic() - 1.0)   # already late
+    eng.observe("c", np.full(2, 0.5), 1.0)
+    eng.add_study("d", deadline=time.monotonic() + 60.0)  # can wait
+    eng.observe("d", np.full(2, 0.5), 1.0)
+    eng.step()
+    assert eng.study_state("c")[0] == "shed"
+    assert eng.study_state("d")[0] == "queued"
+    with pytest.raises(FleetStudyError, match="shed"):
+        eng.request_suggest("c")
+    assert eng.stats_snapshot()["n_shed"] == 1
+
+
+# ===================================================== Schur fallback
+def test_incremental_update_genuine_ill_conditioned_schur():
+    """A duplicate point at (near-)zero noise makes the rank-one Schur
+    complement numerically impossible: ok must flip False (and stays True
+    for a well-separated append at the same θ)."""
+    rng = np.random.default_rng(0)
+    b, D, n0 = 8, 2, 5
+    p = KernelParams(log_lengthscale=jnp.zeros((D,)),
+                     log_amplitude=jnp.asarray(0.0),
+                     log_noise=jnp.asarray(-35.0))   # σ_n² ≈ 6e-16
+    x = jnp.asarray(rng.uniform(0, 1, (b, D)))
+    yv = jnp.asarray(np.sin(3 * np.asarray(x)).sum(1))
+    v = jnp.arange(b) < n0
+    K = gram(x, p, "matern52", jitter=0.0)
+    K = jnp.where(v[:, None] & v[None, :], K, jnp.eye(b))
+    chol = jnp.linalg.cholesky(K)
+    ys, _, _ = standardize_masked(yv * v, v)
+    # well-separated appended point: healthy
+    _, _, _, ok = incremental_update(x, ys, jnp.asarray(n0 + 1), p, chol,
+                                     jitter=0.0)
+    assert bool(ok)
+    # duplicate of an existing row: Schur complement ≈ σ_n² → refused
+    x_dup = x.at[n0].set(x[2])
+    _, _, _, ok = incremental_update(x_dup, ys, jnp.asarray(n0 + 1), p,
+                                     chol, jitter=0.0)
+    assert not bool(ok)
+
+
+def test_injected_fallback_matches_scheduled_full_refit():
+    """Vetoing the incremental ok (exactness fallback) must reproduce a
+    refit_interval=1 engine bit-for-bit — the fallback IS a full refit —
+    and the fallback shows up in EngineStats."""
+    rng = np.random.default_rng(2)
+    D = 3
+    mso = LbfgsbOptions(maxiter=40, pgtol=1e-2)
+    inj = FaultInjector(incr_fail={None: 999})
+    a = AskEngine(EvalEngine(logei_acq),
+                  AskConfig(dim=D, n_restarts=4, pad_bucket=8,
+                            refit_interval=8, warm_start=False, mso=mso),
+                  fault_injector=inj)
+    b = AskEngine(EvalEngine(logei_acq),
+                  AskConfig(dim=D, n_restarts=4, pad_bucket=8,
+                            refit_interval=1, warm_start=False, mso=mso))
+    for i in range(5):
+        xi = rng.uniform(0, 1, D)
+        a.observe(xi, _sphere(xi))
+        b.observe(xi, _sphere(xi))
+    kinds = []
+    for t in range(4):
+        key = jax.random.fold_in(jax.random.PRNGKey(0), t)
+        bxa, ia = a.suggest(key, fit_seed=t)
+        bxb, _ = b.suggest(key, fit_seed=t)
+        np.testing.assert_array_equal(bxa, bxb, err_msg=f"trial {t}")
+        kinds.append(ia.kind)
+        xn = np.clip(bxa, 0, 1)
+        a.observe(xn, _sphere(xn))
+        b.observe(xn, _sphere(xn))
+    assert kinds[0] == "full" and kinds[1:] == ["fallback"] * 3
+    assert a.n_fallbacks == 3 and a.n_incremental == 0
+    assert a.engine.stats_snapshot()["n_refit_fallbacks"] == 3
+    assert inj.n_incr_vetoed == 3
+
+
+# ============================================== crash recovery (chaos)
+def test_crash_recovery_bitwise_per_study_trajectories(tmp_path):
+    """Kill the process (injected) at a journal offset mid-run; recover;
+    per-study suggestion sequences must match an uninterrupted twin
+    bit-for-bit in the cold-refit regime (refit_interval=1, no warm
+    start), including across a post-recovery bucket migration."""
+    d = str(tmp_path)
+    sp = BoxSpace.cube(3, 0.0, 1.0)
+    kw = _fleet_kw()
+    rounds = 12                          # n crosses the 8→16 bucket at 9
+    ref = FleetSampler([sp] * 2, seed=0, **kw)
+    _drive(ref, rounds)
+
+    vic = FleetSampler([sp] * 2, seed=0, journal_dir=d,
+                       fault_injector=FaultInjector(kill_at_seq=26), **kw)
+    crashed = False
+    try:
+        for r in range(rounds):
+            if r == 3:
+                vic.checkpoint()         # replay starts mid-journal
+            _drive(vic, 1)
+    except InjectedCrash:
+        crashed = True
+    assert crashed
+
+    with pytest.warns(UserWarning, match="dropping"):
+        fs, rep = FleetSampler.recover(d)
+    assert rep.truncated_bytes > 0       # the torn record was dropped
+    assert rep.snapshot_step is not None and rep.n_replayed > 0
+    for i, tid in rep.pending:           # asked-but-never-told: re-eval
+        fs.tell(i, tid, _sphere(fs.samplers[i].trials[tid].x))
+    done = min(len(s.trials) for s in fs.samplers)
+    _drive(fs, rounds - done + 1)
+    for i in range(2):
+        a, b = ref.samplers[i].trials, fs.samplers[i].trials
+        n = min(len(a), len(b))
+        assert n >= rounds
+        for k in range(n):
+            np.testing.assert_array_equal(a[k].x, b[k].x,
+                                          err_msg=f"study {i} trial {k}")
+    assert fs.stats_snapshot()["n_migrations"] >= 1   # post-recovery
+
+
+def test_sigterm_drain_checkpoint_and_recover(tmp_path):
+    """SIGTERM (via SIGUSR1, same handler) during optimize(): the loop
+    finishes its in-flight round, drains (checkpoint + journal + clean
+    close), and recover() restores trial state and warm-start θ exactly."""
+    d = str(tmp_path)
+    sp = BoxSpace.cube(3, 0.0, 1.0)
+    fs = FleetSampler([sp] * 2, seed=1, journal_dir=d,
+                      **_fleet_kw(warm_start=True))
+    flag = fs.install_drain_handler()
+    _drive(fs, 6)                        # past startup: θ exists
+    theta = {i: np.array(fs.fleet.study_theta(i)) for i in range(2)}
+    os.kill(os.getpid(), signal.SIGUSR1)
+    assert flag.triggered
+    fs.optimize(_sphere, 5)              # drains at the round boundary
+    assert fs.journal._f is None         # journal closed cleanly
+    recs = _journal_records(d)
+    assert recs[-1]["op"] == "drain"
+    assert any(r["op"] == "refit" for r in recs)
+
+    fs2, rep = FleetSampler.recover(d)
+    assert rep.pending == [] and rep.truncated_bytes == 0
+    for i in range(2):
+        a, b = fs.samplers[i].trials, fs2.samplers[i].trials
+        assert [(t.trial_id, t.state) for t in a] == \
+               [(t.trial_id, t.state) for t in b]
+        for ta, tb in zip(a, b):
+            np.testing.assert_array_equal(ta.x, tb.x)
+        # journaled refit θ restored bit-for-bit → post-recovery
+        # warm-started refits reproduce the uninterrupted run
+        np.testing.assert_array_equal(theta[i],
+                                      np.asarray(fs2.fleet.study_theta(i)))
+
+
+# ========================================== quarantine / park (chaos)
+def test_quarantine_keeps_far_invariant_and_compile_economy(tmp_path):
+    """An injected unhealthy full refit quarantines the newest
+    observation (journaled, owning Trial marked), resets its slot row to
+    the benign idle pattern, and the retry reuses the SAME compiled
+    programs — no trace keyed on quarantine state."""
+    d = str(tmp_path)
+    sp = BoxSpace.cube(3, 0.0, 1.0)
+    inj = FaultInjector(full_fail={1: 1})
+    fs = FleetSampler([sp] * 2, seed=2, journal_dir=d,
+                      fault_injector=inj, **_fleet_kw())
+    _drive(fs, 7)
+    assert inj.n_full_vetoed == 1
+    snap = fs.stats_snapshot()
+    assert snap["n_quarantined"] == 1 and snap["n_parked"] == 0
+    # the poisoned trial is named, in the journal and on the Trial
+    q = [r for r in _journal_records(d) if r["op"] == "quarantine"]
+    assert len(q) == 1 and q[0]["sid"] == 1
+    t = fs.samplers[1].trials[q[0]["trial"]]
+    assert t.state == "quarantined" and "unhealthy" in t.error
+    # _FAR invariant: rows past the study's live count are idle-benign
+    st = fs.fleet._studies[1]
+    blk, slot, n = st.block, st.slot, st.n
+    np.testing.assert_array_equal(np.asarray(blk.x[slot, n:]),
+                                  blk.idle_x[n:])
+    np.testing.assert_array_equal(np.asarray(blk.y[slot, n:]),
+                                  np.zeros(blk.bucket - n))
+    # compile economy: one bucket → ≤3 programs, retries included
+    assert snap["n_fleet_compiles"] <= 3
+    # the study kept being served after quarantine
+    assert len(fs.samplers[1].trials) == len(fs.samplers[0].trials)
+
+
+def test_park_after_quarantine_exhaustion_degrades_to_solo():
+    """Persistent unhealthy refits exhaust the quarantine budget: the
+    study is parked, its sampler degrades to the solo path, and the rest
+    of the fleet is untouched."""
+    sp = BoxSpace.cube(3, 0.0, 1.0)
+    inj = FaultInjector(full_fail={1: 99})
+    fs = FleetSampler([sp] * 2, seed=3, quarantine_retries=1,
+                      fault_injector=inj, **_fleet_kw())
+    _drive(fs, 8)
+    snap = fs.stats_snapshot()
+    assert snap["n_parked"] == 1 and snap["n_quarantined"] == 2
+    assert snap["n_degraded"] == 1
+    s1 = fs.samplers[1]
+    assert s1.degraded is not None and "parked" in s1.degraded
+    assert s1._fleet is None
+    # both studies kept producing trials every round (study 1 solo)
+    assert len(s1.trials) == len(fs.samplers[0].trials) == 8
+    assert fs.samplers[0].degraded is None
+    fs.samplers[0].best()                # fleet study still serves
