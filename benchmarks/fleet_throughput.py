@@ -205,6 +205,8 @@ def run_chaos(S, backend, args):
     if not crashed:
         raise SystemExit(f"--chaos: kill_seq={kill_seq} never reached "
                          f"(rounds={args.rounds} too small)")
+    completed_pre = sum(sum(t.state == "complete" for t in s.trials)
+                        for s in fs.samplers)
 
     t0 = time.perf_counter()
     fs2, rep = FleetSampler.recover(d)
@@ -230,6 +232,12 @@ def run_chaos(S, backend, args):
                       for s in fs2.samplers)
     total_wall = wall1 + recover_wall + wall2
     replay_per_100 = 100.0 * rep.replay_ms / max(n_at_recovery, 1)
+    # goodput / loss breakdown, field-compatible with benchmarks/
+    # bo_serve.py's chaos row: the fleet analog of a deadline miss is a
+    # suggest in flight at the kill (asked, never told) — recovery
+    # re-evaluates it rather than losing it, so it is counted separately
+    # from work that completed cleanly on either side of the crash
+    completed_post = completed - completed_pre
     row = {
         "backend": backend, "mode": "fleet_chaos", "S": S,
         "rounds": args.rounds, "D": args.D, "B": args.B,
@@ -248,6 +256,12 @@ def run_chaos(S, backend, args):
         "replay_ms_per_100_trials": round(replay_per_100, 3),
         "completed_suggests": completed,
         "goodput_sps": completed / total_wall,
+        "goodput_pre_crash_sps": completed_pre / wall1,
+        "goodput_post_recovery_sps": (completed_post / wall2
+                                      if wall2 > 0 else None),
+        "inflight_at_crash": len(rep.pending),
+        "deadline_miss": 0,      # the fleet plane has no request deadlines
+        "shed": 0,               # nothing is dropped: recovery re-evals
         "n_quarantined": quarantined,
         "n_buckets": n_buckets,
         "n_compiles_total": snap["n_fleet_compiles"],
@@ -463,6 +477,13 @@ def main(argv=None):
                     f"_100_trials"] = r["replay_ms_per_100_trials"]
             summary[f"{r['backend']}_S{r['S']}_chaos_goodput_sps"] = \
                 r["goodput_sps"]
+            summary[f"{r['backend']}_S{r['S']}_chaos_goodput_post"
+                    f"_recovery_sps"] = r["goodput_post_recovery_sps"]
+            summary[f"{r['backend']}_S{r['S']}_chaos_inflight"
+                    f"_at_crash"] = r["inflight_at_crash"]
+            summary[f"{r['backend']}_S{r['S']}_chaos_deadline_miss"] = \
+                r["deadline_miss"]
+            summary[f"{r['backend']}_S{r['S']}_chaos_shed"] = r["shed"]
 
     record = {
         "bench": "fleet_throughput",

@@ -521,7 +521,11 @@ class FleetSampler:
         max_blocks: Optional[int] = None,
         admission_timeout: Optional[float] = None,
         quarantine_retries: int = 2,
+        retry_backoff_base: float = 0.0,
+        retry_backoff_cap: float = 2.0,
+        retry_backoff_jitter: float = 0.25,
         degrade_to_solo: bool = False,
+        sleep_fn=None,
         _journal: Optional[StudyJournal] = None,
     ):
         from repro.engine import FleetConfig, FleetEngine
@@ -567,6 +571,9 @@ class FleetSampler:
                 "max_queue": max_queue, "max_blocks": max_blocks,
                 "admission_timeout": admission_timeout,
                 "quarantine_retries": quarantine_retries,
+                "retry_backoff_base": retry_backoff_base,
+                "retry_backoff_cap": retry_backoff_cap,
+                "retry_backoff_jitter": retry_backoff_jitter,
                 "degrade_to_solo": degrade_to_solo,
                 "mso": dict(m=o.m, maxiter=o.maxiter, pgtol=o.pgtol,
                             ftol=o.ftol, maxls=o.maxls,
@@ -583,8 +590,12 @@ class FleetSampler:
                               ftol=o.ftol, maxls=o.maxls),
             max_studies=max_studies, max_queue=max_queue,
             max_blocks=max_blocks, admission_timeout=admission_timeout,
-            quarantine_retries=quarantine_retries), mesh=mesh,
-            journal=self.journal, fault_injector=fault_injector)
+            quarantine_retries=quarantine_retries,
+            retry_backoff_base=retry_backoff_base,
+            retry_backoff_cap=retry_backoff_cap,
+            retry_backoff_jitter=retry_backoff_jitter), mesh=mesh,
+            journal=self.journal, fault_injector=fault_injector,
+            sleep_fn=sleep_fn)
         self.fleet.on_quarantine = self._on_quarantine
         self.samplers: List[GPSampler] = []
         for i, sp in enumerate(spaces):
@@ -621,19 +632,49 @@ class FleetSampler:
         sample randomly and skip the batch; degraded studies run their
         solo engine).  Every ask is journaled (WAL) before the trial is
         handed back."""
-        for s in self.samplers:
+        out = self.ask_batch(range(len(self.samplers)))
+        for t in out:                    # sync semantics: failures raise
+            if isinstance(t, Exception):
+                raise t
+        return out
+
+    def ask_batch(self, studies) -> List:
+        """Ask a *subset* of studies at one trial boundary, batched into
+        ONE ``fleet.step()`` (the BO service's dispatch plane: only the
+        studies the scheduler picked this round pay for a suggest).
+        Per-study failures are isolated — the returned list holds the
+        exception in that study's position instead of raising, so one
+        broken study cannot take down the whole batch."""
+        studies = list(studies)
+        for i in studies:
+            s = self.samplers[i]
             if s._fleet is not None:
                 s.prefetch_suggest()
         self.fleet.step()
-        out = []
-        for i, s in enumerate(self.samplers):
+        out: List = []
+        for i in studies:
+            s = self.samplers[i]
             n_done = sum(t.state == "complete" for t in s.trials)
             startup = n_done < s.n_startup
-            t = s.ask()
+            try:
+                t = s.ask()
+            except Exception as e:       # noqa: BLE001 — study isolation
+                out.append(e)
+                continue
             self._append({"op": "ask", "study": i, "trial": t.trial_id,
                           "x": t.x.tolist(), "startup": startup})
             out.append(t)
         return out
+
+    def cancel_ask(self, study: int) -> bool:
+        """Withdraw a study's in-flight fleet suggest (service deadline
+        shed): the slot reservation is freed and any uncollected result
+        discarded.  Deterministic to undo — suggest keys derive from the
+        trial count, so a later re-request recomputes the same point."""
+        s = self.samplers[study]
+        if s._fleet is None:
+            return False
+        return self.fleet.cancel_request(s._fleet_sid)
 
     def tell(self, study: int, trial_id: int, y: float, *,
              failed: bool = False, error: Optional[str] = None) -> None:
@@ -648,6 +689,11 @@ class FleetSampler:
                       "y": None if failed else float(y), "failed": failed,
                       "error": error})
         self.samplers[study].tell(trial_id, y, failed=failed, error=error)
+        fi = self.fault_injector
+        if fi is not None and hasattr(fi, "tell_delay"):
+            d = fi.tell_delay()     # injected slow tell (virtual clock)
+            if d > 0.0:
+                self.fleet._sleep(d)
 
     def optimize(self, objectives, n_rounds: int) -> List[Trial]:
         """Run ``n_rounds`` synchronized ask/tell rounds; ``objectives``
@@ -736,8 +782,8 @@ class FleetSampler:
         return {"served": served, "snapshot_step": step}
 
     @classmethod
-    def recover(cls, journal_dir: str, *, mesh=None, fault_injector=None
-                ) -> Tuple["FleetSampler", RecoveryReport]:
+    def recover(cls, journal_dir: str, *, mesh=None, fault_injector=None,
+                sleep_fn=None) -> Tuple["FleetSampler", RecoveryReport]:
         """Reconstruct a crashed/drained fleet from its journal directory.
 
         The config record rebuilds the fleet; the newest valid snapshot
@@ -762,15 +808,19 @@ class FleetSampler:
         cfg = records[0]
         spaces = [BoxSpace(np.asarray(lo), np.asarray(up))
                   for lo, up in zip(cfg["lower"], cfg["upper"])]
+        defaults = {"retry_backoff_base": 0.0, "retry_backoff_cap": 2.0,
+                    "retry_backoff_jitter": 0.25}
         fs = cls(spaces, mesh=mesh, fault_injector=fault_injector,
-                 _journal=journal, mso_options=MsoOptions(**cfg["mso"]),
-                 **{k: cfg[k] for k in (
+                 sleep_fn=sleep_fn, _journal=journal,
+                 mso_options=MsoOptions(**cfg["mso"]),
+                 **{k: cfg.get(k, defaults.get(k)) for k in (
                      "seed", "slots", "n_startup_trials", "n_restarts",
                      "pad_multiple", "gp_fit_restarts",
                      "posterior_backend", "refit_interval", "warm_start",
                      "max_studies", "max_queue", "max_blocks",
                      "admission_timeout", "quarantine_retries",
-                     "degrade_to_solo")})
+                     "retry_backoff_base", "retry_backoff_cap",
+                     "retry_backoff_jitter", "degrade_to_solo")})
         # ---- snapshot: bulk state, bounding the replay length
         snap_seq, snap_step = 0, None
         if fs.ckpt is not None:

@@ -117,6 +117,13 @@ class FleetConfig:
     max_blocks: Optional[int] = None     # slot-block cap (device memory)
     admission_timeout: Optional[float] = None   # seconds queued → shed
     quarantine_retries: int = 2          # bad-refit retries before parking
+    # bounded exponential backoff between quarantine retries (0 disables:
+    # immediate re-runs).  Jitter decorrelates a block's retry storms
+    # from its neighbors'; the draw comes from a dedicated host RNG so it
+    # is deterministic per engine and never touches study PRNG streams.
+    retry_backoff_base: float = 0.0      # seconds before retry attempt 1
+    retry_backoff_cap: float = 2.0       # backoff ceiling (seconds)
+    retry_backoff_jitter: float = 0.25   # multiplicative jitter fraction
 
     def __post_init__(self):
         if self.slots < 1:
@@ -127,6 +134,8 @@ class FleetConfig:
             raise ValueError("n_restarts must be >= 2")
         if self.quarantine_retries < 0:
             raise ValueError("quarantine_retries must be >= 0")
+        if self.retry_backoff_base < 0.0:
+            raise ValueError("retry_backoff_base must be >= 0")
 
 
 class _Study:
@@ -253,10 +262,15 @@ class FleetEngine:
 
     def __init__(self, engine: EvalEngine, cfg: FleetConfig,
                  mesh: Optional[Mesh] = None, journal=None,
-                 fault_injector=None):
+                 fault_injector=None, sleep_fn=None):
         self.engine = engine
         self.cfg = cfg
         self.mesh = mesh
+        # backoff/latency sleeps go through this hook so tests (and the
+        # BO service's virtual-clock mode) can charge simulated time
+        # instead of wall-clocking; deterministic jitter from a host RNG
+        self._sleep = time.sleep if sleep_fn is None else sleep_fn
+        self._backoff_rng = np.random.default_rng(0xB0)
         # durability + chaos hooks (both host-side, both optional):
         # ``journal`` duck-types StudyJournal.append (admission, migration,
         # refit-θ, quarantine, shed records — the sampler journals
@@ -325,6 +339,9 @@ class FleetEngine:
         self.n_shed = 0                  # queued studies past deadline
         self.n_quarantined = 0           # observations dropped as poison
         self.n_parked = 0                # studies retired by quarantine
+        self.n_retries = 0               # quarantine retry refit launches
+        self.n_retry_backoffs = 0        # backoff sleeps taken
+        self.backoff_total_s = 0.0       # total backoff charged (seconds)
 
     def _journal(self, record: dict) -> None:
         if self.journal is not None:
@@ -431,6 +448,20 @@ class FleetEngine:
         res, st.result = st.result, None
         return res
 
+    def cancel_request(self, sid: Hashable) -> bool:
+        """Withdraw a study's pending suggest request (deadline shed at
+        the service layer): frees the slot's per-step reservation so the
+        next block step does no work for it.  An already-computed but
+        uncollected result is discarded too — safe, because suggest keys
+        are caller-derived, so re-requesting with the same key and the
+        same observations recomputes the identical suggestion.  Returns
+        whether anything was actually withdrawn."""
+        st = self._studies[sid]
+        had = st.pending is not None or st.result is not None
+        st.pending = None
+        st.result = None
+        return had
+
     def suggest(self, sid: Hashable, key: Optional[Array] = None,
                 fit_seed: Optional[int] = None
                 ) -> Tuple[np.ndarray, SuggestInfo]:
@@ -507,6 +538,9 @@ class FleetEngine:
             "n_shed": self.n_shed,
             "n_quarantined": self.n_quarantined,
             "n_parked": self.n_parked,
+            "n_retries": self.n_retries,
+            "n_retry_backoffs": self.n_retry_backoffs,
+            "backoff_total_s": round(self.backoff_total_s, 6),
             "n_devices": self._ndev,
             "slots_per_device": self._device_occupancy(),
             "queue_depth": len(self._queue),
@@ -777,6 +811,15 @@ class FleetEngine:
                     blk.kinv)
                 blk.theta, blk.chol, blk.alpha, blk.kinv = \
                     theta, chol, alpha, kinv
+                fi = self.fault_injector
+                if fi is not None and hasattr(fi, "full_delay"):
+                    # injected refit latency: charge the sleep hook (a
+                    # virtual clock in tests) — data/timing only, the
+                    # compiled program is untouched
+                    d = fi.full_delay([blk.studies[s].sid
+                                       for s in pending_full])
+                    if d > 0.0:
+                        self._sleep(d)
                 okf = np.asarray(okf)
                 if self.fault_injector is not None:
                     okf = self.fault_injector.full_ok(okf, sids)
@@ -815,6 +858,23 @@ class FleetEngine:
                 pending_full = nxt
                 if not pending_full:
                     break
+                # bounded exponential backoff (with jitter) before the
+                # retry: a persistently unhealthy slot must not hot-spin
+                # full refits back-to-back.  Host-side only — the retry
+                # still reuses the same compiled program.
+                self.n_retries += len(pending_full)
+                if cfg.retry_backoff_base > 0.0:
+                    delay = min(cfg.retry_backoff_base * (2.0 ** attempt),
+                                cfg.retry_backoff_cap)
+                    delay *= 1.0 + (cfg.retry_backoff_jitter
+                                    * float(self._backoff_rng.random()))
+                    self.n_retry_backoffs += 1
+                    self.backoff_total_s += delay
+                    self._journal({"op": "backoff", "attempt": attempt + 1,
+                                   "delay_s": delay,
+                                   "sids": [blk.studies[s].sid
+                                            for s in pending_full]})
+                    self._sleep(delay)
             nv = jnp.asarray(blk.n_valid())
             # parked studies dropped their requests mid-phase
             req = [(s, st) for s, st in req if st.pending is not None]

@@ -12,6 +12,15 @@ production code exposes (``StudyJournal``, ``FleetEngine``,
   flag, forcing the exactness fallback (full refit) deterministically.
 * ``full_ok(ok, sids)`` — mark a full MAP refit unhealthy, forcing the
   quarantine → retry → park path deterministically.
+* ``full_delay(sids)`` / ``tell_delay()`` — deterministic *latency*
+  injection: report how many (virtual) seconds a full refit / a tell
+  should appear to take.  The caller charges the delay to its sleep
+  hook, which under a :class:`VirtualClock` advances simulated time
+  instead of wall-clocking — so service timeout, backoff, and watchdog
+  paths are testable without real sleeps or flaky wall-clock margins.
+* ``ask_ok(study)`` — veto an ask dispatch at the service layer
+  (``serve/bo_service.py``), simulating a transient refit/serve failure
+  so the bounded-backoff retry path is exercised deterministically.
 
 All hooks are host-side: an injector changes scheduling decisions, never
 traced code, so the compile-economy invariants must hold under chaos.
@@ -23,13 +32,39 @@ exactly.  ``sids`` may contain ``None`` entries — idle fleet slots, or
 the solo ``AskEngine`` (which has no study id); budget vetoes keyed on
 ``None`` target those.
 """
-from typing import Dict, Hashable, Optional
+from typing import Dict, Hashable, Optional, Tuple
 
 import numpy as np
 
 
+class VirtualClock:
+    """Deterministic time source for service/robustness tests.
+
+    Duck-types the pair the production code takes (``now()`` like
+    ``time.monotonic``, ``sleep()`` like ``time.sleep``) but only ever
+    advances when told: real wall time never leaks in, so deadline,
+    backoff, and watchdog behavior is exactly reproducible."""
+
+    def __init__(self, t0: float = 0.0):
+        self.t = float(t0)
+        self.n_sleeps = 0
+        self.slept_s = 0.0
+
+    def now(self) -> float:
+        return self.t
+
+    def sleep(self, dt: float) -> None:
+        dt = max(0.0, float(dt))
+        self.t += dt
+        self.n_sleeps += 1
+        self.slept_s += dt
+
+    def advance(self, dt: float) -> None:
+        self.t += float(dt)
+
+
 class FaultInjector:
-    """Scriptable chaos: journal kills + refit-health vetoes.
+    """Scriptable chaos: journal kills + refit-health vetoes + latency.
 
     Parameters
     ----------
@@ -45,17 +80,39 @@ class FaultInjector:
     full_fail:
         ``{sid: budget}`` — mark up to ``budget`` full refits for that
         study unhealthy.
+    full_latency:
+        ``{sid: (seconds, budget)}`` — the study's next ``budget`` full
+        refits report an extra ``seconds`` of (virtual) latency through
+        ``full_delay``.
+    tell_latency:
+        ``(seconds, budget)`` — the next ``budget`` tells report an
+        extra ``seconds`` of (virtual) latency through ``tell_delay``.
+    ask_fail:
+        ``{study: budget}`` — the service treats that study's next
+        ``budget`` ask dispatches as transient failures (retry path).
     """
 
     def __init__(self, *, kill_at_seq: Optional[int] = None,
                  incr_fail: Optional[Dict[Hashable, int]] = None,
-                 full_fail: Optional[Dict[Hashable, int]] = None):
+                 full_fail: Optional[Dict[Hashable, int]] = None,
+                 full_latency: Optional[
+                     Dict[Hashable, Tuple[float, int]]] = None,
+                 tell_latency: Optional[Tuple[float, int]] = None,
+                 ask_fail: Optional[Dict[Hashable, int]] = None):
         self.kill_at_seq = kill_at_seq
         self.incr_fail = dict(incr_fail or {})
         self.full_fail = dict(full_fail or {})
+        self.full_latency = {k: list(v)
+                             for k, v in (full_latency or {}).items()}
+        self.tell_latency = list(tell_latency) if tell_latency else None
+        self.ask_fail = dict(ask_fail or {})
         self.n_kills = 0
         self.n_incr_vetoed = 0
         self.n_full_vetoed = 0
+        self.n_full_delays = 0
+        self.n_tell_delays = 0
+        self.n_ask_vetoed = 0
+        self.injected_delay_s = 0.0
 
     # ------------------------------------------------------ journal hook
     def should_kill(self, seq: int) -> bool:
@@ -86,3 +143,37 @@ class FaultInjector:
         out = self._veto(self.full_fail, ok, sids)
         self.n_full_vetoed += before - int(np.sum(out))
         return out
+
+    # ---------------------------------------------------- latency hooks
+    def full_delay(self, sids) -> float:
+        """Virtual seconds this full-refit launch should appear to take
+        (summed over the batched studies with latency budget left)."""
+        total = 0.0
+        for sid in sids:
+            ent = self.full_latency.get(sid)
+            if ent is not None and ent[1] > 0:
+                total += ent[0]
+                ent[1] -= 1
+                self.n_full_delays += 1
+        self.injected_delay_s += total
+        return total
+
+    def tell_delay(self) -> float:
+        """Virtual seconds the next tell should appear to take."""
+        ent = self.tell_latency
+        if ent is not None and ent[1] > 0:
+            ent[1] -= 1
+            self.n_tell_delays += 1
+            self.injected_delay_s += ent[0]
+            return ent[0]
+        return 0.0
+
+    # ------------------------------------------------- service ask hook
+    def ask_ok(self, study) -> bool:
+        """False: the service must treat this dispatch as a transient
+        failure (and retry with backoff)."""
+        if self.ask_fail.get(study, 0) > 0:
+            self.ask_fail[study] -= 1
+            self.n_ask_vetoed += 1
+            return False
+        return True
