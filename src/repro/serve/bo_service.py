@@ -78,6 +78,11 @@ from repro.engine import FleetFullError
 
 RUNGS = ("admit", "reject", "degrade", "shed_tenant")
 
+# Per-tenant latency history cap: large enough that benchmark-scale runs
+# keep every sample for exact p50/p99, bounded so a long-lived service
+# deployment doesn't leak memory proportional to requests served.
+TENANT_LATENCY_CAP = 65536
+
 
 class DeadlineExceeded(RuntimeError):
     """The request's deadline budget ran out (shed while queued, or the
@@ -114,7 +119,10 @@ class TenantConfig:
 @dataclass(frozen=True)
 class OverloadConfig:
     """Ladder thresholds.  Depth counts queued+delayed asks; the p99
-    rungs compare the rolling completion-latency estimate to the SLO."""
+    rungs compare the rolling completion-latency estimate to the SLO,
+    and apply only while a backlog exists — the estimate refreshes on
+    completions, so with an empty queue it is stale by construction and
+    must not pin the service at reject."""
     reject_depth: int = 64           # rung 1: refuse new asks
     degrade_depth: int = 128         # rung 2: degrade lowest-weight tenant
     shed_depth: int = 256            # rung 3: shed lowest-weight tenant
@@ -133,7 +141,8 @@ class _Request:
     """One ask request's lifecycle record (the sync-core 'future')."""
 
     __slots__ = ("rid", "tenant", "study", "submit_t", "deadline", "state",
-                 "result", "error", "attempts", "not_before", "done_t")
+                 "result", "error", "attempts", "not_before", "done_t",
+                 "event")
 
     def __init__(self, rid: int, tenant: str, study: int, submit_t: float,
                  deadline: Optional[float]):
@@ -148,10 +157,19 @@ class _Request:
         self.attempts = 0
         self.not_before: Optional[float] = None   # backoff eligibility
         self.done_t: Optional[float] = None
+        self.event: Optional[asyncio.Event] = None   # async waiter, if any
 
     @property
     def done(self) -> bool:
         return self.state in ("done", "shed", "failed")
+
+    def _wake(self) -> None:
+        """Wake the async waiter (if one attached) after a terminal
+        state transition.  Every code path that sets a terminal state
+        must call this, or an :meth:`BOService.ask` coroutine waits
+        forever."""
+        if self.event is not None:
+            self.event.set()
 
 
 @dataclass
@@ -169,7 +187,8 @@ class _TenantState:
     n_rejected: int = 0
     n_bad_tells: int = 0
     n_retries: int = 0
-    latencies: List[float] = field(default_factory=list)
+    latencies: Deque[float] = field(
+        default_factory=lambda: deque(maxlen=TENANT_LATENCY_CAP))
 
 
 class BOService:
@@ -416,7 +435,7 @@ class BOService:
         """WAL, then fail the request; a request that ever dispatched
         also withdraws its fleet-side reservation."""
         self._journal({"op": "svc_shed", "req": req.rid,
-                       "reason": reason})
+                       "kind": "deadline", "reason": reason})
         if req.attempts > 0 or req.state == "dispatched":
             self.fs.cancel_ask(req.study)
         req.state = "shed"
@@ -429,12 +448,18 @@ class BOService:
         t.n_deadline_miss += 1
         self.n_shed += 1
         self.n_deadline_miss += 1
+        req._wake()
 
     # ------------------------------------------------------ overload ladder
     def _update_rung(self, now: float) -> None:
         oc = self.overload
         depth = self.queue_depth()
-        p99 = self.p99()
+        # The p99 estimate only refreshes on completions.  With an empty
+        # queue there are no completions coming (rung >= 1 refuses new
+        # asks), so a stale over-SLO window would otherwise freeze the
+        # service in reject forever; p99 rungs apply only while a
+        # backlog exists to refresh the estimate.
+        p99 = self.p99() if depth > 0 else None
         rung, why = 0, ""
         checks = [(1, oc.reject_depth, 1.0), (2, oc.degrade_depth, 2.0),
                   (3, oc.shed_depth, 4.0)]
@@ -494,15 +519,18 @@ class BOService:
         self._journal({"op": "svc_shed_tenant", "tenant": t.cfg.name,
                        "reason": reason, "dropped": dropped})
         t.shed = reason
-        for req in list(t.queue):
+        mine = list(t.queue) + [r for r in self._delayed
+                                if r.tenant == t.cfg.name]
+        t.queue.clear()
+        self._delayed = [r for r in self._delayed
+                         if r.tenant != t.cfg.name]
+        for req in mine:         # queued AND backoff-delayed both resolve
             req.state = "shed"
             req.error = TenantShedError(reason)
             req.done_t = now
             t.n_shed += 1
             self.n_shed += 1
-        t.queue.clear()
-        self._delayed = [r for r in self._delayed
-                         if r.tenant != t.cfg.name]
+            req._wake()
         for study in t.cfg.studies:
             s = self.fs.samplers[study]
             if s._fleet is not None:
@@ -581,6 +609,7 @@ class BOService:
             t.latencies.append(lat)
             self.n_completed += 1
             served += 1
+            req._wake()
         return served
 
     def _retry(self, req: _Request, err: BaseException) -> None:
@@ -589,6 +618,7 @@ class BOService:
         t = self._tenants[req.tenant]
         if req.attempts > self.max_retries:
             self._journal({"op": "svc_shed", "req": req.rid,
+                           "kind": "failed",
                            "reason": f"retries exhausted: {err}"})
             req.state = "failed"
             req.error = RequestFailed(
@@ -597,6 +627,7 @@ class BOService:
             req.done_t = self._now()
             t.n_shed += 1
             self.n_shed += 1
+            req._wake()
             return
         delay = min(self.backoff_base * (2.0 ** (req.attempts - 1)),
                     self.backoff_cap)
@@ -635,6 +666,7 @@ class BOService:
                     f"request {req.rid} interrupted by drain (journaled; "
                     f"recovery restores it)")
                 req.done_t = now
+                req._wake()
             t.queue.clear()
         for req in self._delayed:
             req.state = "shed"
@@ -642,6 +674,7 @@ class BOService:
                 f"request {req.rid} interrupted by drain (journaled; "
                 f"recovery restores it)")
             req.done_t = now
+            req._wake()
         self._delayed = []
         return self.fs.drain()
 
@@ -729,8 +762,20 @@ class BOService:
             elif op == "svc_shed":
                 req = ledger.get(rec["req"])
                 if req is not None:
-                    req.state = "shed"
-                    req.error = DeadlineExceeded(rec["reason"])
+                    # two shed kinds share the record: deadline sheds
+                    # and retries-exhausted failures keep their live
+                    # error class through replay (older journals lack
+                    # the field — fall back on the reason text)
+                    kind = rec.get("kind")
+                    if kind is None:
+                        kind = ("failed" if rec["reason"].startswith(
+                            "retries exhausted") else "deadline")
+                    if kind == "failed":
+                        req.state = "failed"
+                        req.error = RequestFailed(rec["reason"])
+                    else:
+                        req.state = "shed"
+                        req.error = DeadlineExceeded(rec["reason"])
                     dispatched.pop(req.study, None)
             elif op == "svc_overload":
                 svc._rung = RUNGS.index(rec["rung"])
@@ -799,8 +844,15 @@ class BOService:
     async def ask(self, tenant: str, study: Optional[int] = None,
                   deadline: Optional[float] = None) -> Trial:
         req = self.submit_ask(tenant, study, deadline)
-        while not req.done:
-            await asyncio.sleep(0)
+        if not req.done:
+            # event-wait, not a sleep(0) poll loop: the waiting client
+            # coroutine parks until the server task resolves the
+            # request (every terminal transition calls req._wake()),
+            # so idle waiters cost the event loop nothing
+            req.event = asyncio.Event()
+            if req.done:     # resolved between submit and attach
+                req.event.set()
+            await req.event.wait()
         if req.error is not None:
             raise req.error
         return req.result
