@@ -105,6 +105,7 @@ def bench_backend(backend: str, args) -> list:
             "steady_ms": float(np.median(sm)) if sm else None,
             "n_steady_trials": len(sm),
             "best_y": s.best().y,
+            "retrace_causes": (engine.get("retraces") or {}).get("causes"),
         }
         if fused:
             row["ask_stats"] = {k: engine.get(k) for k in
@@ -150,7 +151,8 @@ def bench_backend(backend: str, args) -> list:
         n_suggests = args.trials - args.n_startup
         assert compiles <= 2 * n_buckets, \
             f"fused ask compiled {compiles}x for {n_buckets} buckets " \
-            f"(must be <= 2/bucket, not O(trials)={n_suggests})"
+            f"(must be <= 2/bucket, not O(trials)={n_suggests}); " \
+            f"retrace causes: {fus['retrace_causes']}"
         # O(trials) sanity only meaningful once suggests outnumber the
         # per-bucket trace budget
         assert n_suggests <= 2 * n_buckets or compiles < n_suggests, \
@@ -196,6 +198,8 @@ def main(argv=None):
             summary[f"{tag}_median_suggest_ms"] = r["median_suggest_ms"]
             if r["steady_ms"] is not None:
                 summary[f"{tag}_steady_ms"] = r["steady_ms"]
+            if r["retrace_causes"] is not None:
+                summary[f"{tag}_retrace_causes"] = r["retrace_causes"]
         else:
             summary[f"{r['backend']}_speedup_median"] = r["speedup_median"]
             if r["speedup_steady"] is not None:

@@ -57,6 +57,8 @@ jax.config.update("jax_enable_x64", True)
 
 import numpy as np                                     # noqa: E402
 
+from repro.analysis.runtime import (install_nan_guard,  # noqa: E402
+                                    nan_guard_stats)
 from repro.bo.objectives import make_objective         # noqa: E402
 from repro.bo.sampler import FleetSampler              # noqa: E402
 from repro.bo.space import BoxSpace                    # noqa: E402
@@ -118,6 +120,8 @@ def _build(specs, *, journal_dir=None, fi=None, args):
                       refit_interval=args.refit_interval,
                       journal_dir=journal_dir, fault_injector=fi,
                       mso_options=MsoOptions())
+    if args.debug_nans:
+        install_nan_guard(fs.fleet)
     svc = BOService(fs, tenants, max_retries=3, backoff_base=0.01,
                     backoff_cap=0.1)
     return svc, objs
@@ -203,6 +207,7 @@ def _overall_row(svc, mix, wall, extra=None):
                    if lats.size else None),
         "n_buckets": n_buckets,
         "n_compiles_total": snap["n_fleet_compiles"],
+        "retrace_causes": snap["retraces"]["causes"],
         **(extra or {}),
     }
     return row
@@ -212,7 +217,10 @@ def run_mix(mix, specs, args):
     svc, objs = _build(specs, args=args)
     events = _arrivals(specs, args.seed)
     wall = _pump(svc, objs, events, {})
-    rows = _tenant_rows(svc, mix, wall) + [_overall_row(svc, mix, wall)]
+    extra = ({"nan_guard": nan_guard_stats(svc.fs.fleet)}
+             if args.debug_nans else None)
+    rows = _tenant_rows(svc, mix, wall) + \
+        [_overall_row(svc, mix, wall, extra)]
     over = rows[-1]
     print(f"serve_bench,{mix},completed={over['completed']},"
           f"goodput={over['goodput_sps']:.2f}/s,p50={over['p50_ms']}ms,"
@@ -222,7 +230,8 @@ def run_mix(mix, specs, args):
     if args.check_compiles:
         assert over["n_compiles_total"] <= 3 * over["n_buckets"], \
             f"{mix}: {over['n_compiles_total']} traces for " \
-            f"{over['n_buckets']} buckets (must be <= 3/bucket)"
+            f"{over['n_buckets']} buckets (must be <= 3/bucket); " \
+            f"retrace causes: {over['retrace_causes']}"
         if mix == "skew":
             by = {r["tenant"]: r for r in rows if r.get("tenant")}
             light, heavy = by["light"], by["heavy"]
@@ -273,6 +282,8 @@ def run_chaos(args):
     t0 = time.perf_counter()
     svc2, rep = BOService.recover(d)
     recover_wall = time.perf_counter() - t0
+    if args.debug_nans:
+        install_nan_guard(svc2.fs.fleet)
     # re-tell what was in flight at the kill, serve the restored queue,
     # then finish the arrival schedule (the remaining events are all
     # "due" — the outage consumed their arrival times)
@@ -312,7 +323,10 @@ def run_chaos(args):
         "retries": snap["svc_retries"],
         "n_buckets": n_buckets,
         "n_compiles_total": snap["n_fleet_compiles"],
+        "retrace_causes": snap["retraces"]["causes"],
     }
+    if args.debug_nans:
+        row["nan_guard"] = nan_guard_stats(svc2.fs.fleet)
     print(f"serve_bench,chaos,kill_seq={kill_seq},"
           f"goodput={row['goodput_sps']:.2f}/s "
           f"(pre={row['goodput_pre_crash_sps']:.2f},"
@@ -329,7 +343,8 @@ def run_chaos(args):
             "chaos: latency injection never fired"
         assert row["n_compiles_total"] <= 3 * n_buckets, \
             f"chaos: {row['n_compiles_total']} traces for {n_buckets} " \
-            f"buckets after recovery (must be <= 3/bucket)"
+            f"buckets after recovery (must be <= 3/bucket); " \
+            f"retrace causes: {row['retrace_causes']}"
         print(f"serve_bench,chaos,checks OK (recovered, goodput "
               f"{row['goodput_sps']:.2f}/s, {row['n_compiles_total']} "
               f"traces)", flush=True)
@@ -348,6 +363,11 @@ def main(argv=None):
                     help="add a journaled kill-and-recover row with "
                     "latency injection")
     ap.add_argument("--check-compiles", action="store_true")
+    ap.add_argument("--debug-nans", action="store_true",
+                    help="wrap the three fleet block programs in a "
+                    "finite-guard: every float leaf entering/leaving "
+                    "them is checked; raises NonFiniteError naming the "
+                    "program and leaf (one host sync per call)")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args(argv)
 
@@ -379,6 +399,10 @@ def main(argv=None):
             summary[f"{m}_p99_ms"] = r["p99_ms"]
             summary[f"{m}_deadline_miss"] = r["deadline_miss"]
             summary[f"{m}_shed"] = r["shed"]
+            summary[f"{m}_retrace_causes"] = r["retrace_causes"]
+            if "nan_guard" in r:
+                summary[f"{m}_nan_guard_checks"] = \
+                    r["nan_guard"]["n_guard_checks"]
         elif r["mode"] == "serve" and r["mix"] == "skew":
             summary[f"skew_{r['tenant']}_p99_ms"] = r["p99_ms"]
         elif r["mode"] == "serve_chaos":
@@ -388,6 +412,7 @@ def main(argv=None):
             summary["chaos_inflight_at_crash"] = r["inflight_at_crash"]
             summary["chaos_deadline_miss"] = r["deadline_miss"]
             summary["chaos_shed"] = r["shed"]
+            summary["chaos_retrace_causes"] = r["retrace_causes"]
 
     record = {
         "bench": "bo_serve",

@@ -71,6 +71,7 @@ jax.config.update("jax_enable_x64", True)
 
 import numpy as np                                     # noqa: E402
 
+from repro.analysis.runtime import install_nan_guard, nan_guard_stats  # noqa: E402
 from repro.bo.objectives import make_objective         # noqa: E402
 from repro.bo.sampler import FleetSampler, GPSampler   # noqa: E402
 from repro.bo.space import BoxSpace                    # noqa: E402
@@ -136,6 +137,8 @@ def run_fleet(S, backend, args, mesh_devices=None):
     fs = FleetSampler([BoxSpace.cube(args.D, *o.bounds) for o in objs],
                       seed=0, slots=slots, mesh=mesh,
                       **_sampler_kw(args, backend))
+    if args.debug_nans:
+        install_nan_guard(fs.fleet)
     round_ms, steady = [], []
     for r in range(args.rounds):
         c0 = fs.stats_snapshot()["n_fleet_compiles"]
@@ -159,7 +162,10 @@ def run_fleet(S, backend, args, mesh_devices=None):
         "n_incremental": snap["n_incremental"],
         "n_fallbacks": snap["n_fallbacks"],
         "n_migrations": snap["n_migrations"],
+        "retrace_causes": snap["retraces"]["causes"],
     }
+    if args.debug_nans:
+        extra["nan_guard"] = nan_guard_stats(fs.fleet)
     if mesh_devices is not None:
         extra.update({
             "mesh_devices": snap["n_devices"],
@@ -190,6 +196,8 @@ def run_chaos(S, backend, args):
     fs = FleetSampler(spaces, seed=0, slots=min(args.slots, S),
                       journal_dir=d, fault_injector=inj,
                       **_sampler_kw(args, backend))
+    if args.debug_nans:
+        install_nan_guard(fs.fleet)
     t0 = time.perf_counter()
     crashed = False
     try:
@@ -211,6 +219,8 @@ def run_chaos(S, backend, args):
     t0 = time.perf_counter()
     fs2, rep = FleetSampler.recover(d)
     recover_wall = time.perf_counter() - t0
+    if args.debug_nans:
+        install_nan_guard(fs2.fleet)
     n_at_recovery = sum(len(s.trials) for s in fs2.samplers)
     for i, tid in rep.pending:           # asked-but-never-told: re-eval
         fs2.tell(i, tid, objs[i](fs2.samplers[i].trials[tid].x))
@@ -265,7 +275,10 @@ def run_chaos(S, backend, args):
         "n_quarantined": quarantined,
         "n_buckets": n_buckets,
         "n_compiles_total": snap["n_fleet_compiles"],
+        "retrace_causes": snap["retraces"]["causes"],
     }
+    if args.debug_nans:
+        row["nan_guard"] = nan_guard_stats(fs2.fleet)
     print(f"fleet_bench,{backend},S={S},chaos,kill_seq={kill_seq},"
           f"replay={replay_per_100:.2f}ms/100trials,"
           f"goodput={row['goodput_sps']:.2f}/s,"
@@ -278,7 +291,8 @@ def run_chaos(S, backend, args):
             "chaos: injected crash left no torn record"
         assert snap["n_fleet_compiles"] <= 3 * n_buckets, \
             f"chaos: {snap['n_fleet_compiles']} traces for {n_buckets} " \
-            f"buckets after recovery (must be <= 3/bucket)"
+            f"buckets after recovery (must be <= 3/bucket); " \
+            f"retrace causes: {snap['retraces']['by_program']}"
         print(f"fleet_bench,{backend},S={S},chaos compile check OK "
               f"({snap['n_fleet_compiles']} traces, {n_buckets} buckets)",
               flush=True)
@@ -342,6 +356,7 @@ def bench_backend(backend, sizes, args):
                      "speedup_aggregate": speed,
                      "speedup_steady": speed_steady})
         fleet_compiles[S] = (fl["n_compiles_total"], fl["n_buckets"])
+        fleet_retraces = fl["retrace_causes"]
 
         # mesh rows: the same fleet sharded over 1 and --mesh devices —
         # compile counts must not move with the device count
@@ -380,7 +395,8 @@ def bench_backend(backend, sizes, args):
                 compiles, n_buckets = vals.pop()
                 assert compiles <= 3 * n_buckets, \
                     f"S={S} mesh: {compiles} traces for {n_buckets} " \
-                    f"buckets (must be <= 3/bucket)"
+                    f"buckets (must be <= 3/bucket); retrace causes: " \
+                    f"{extra['retrace_causes']}"
                 print(f"fleet_bench,{backend},S={S},mesh compile check "
                       f"OK {mesh_compiles}", flush=True)
 
@@ -388,7 +404,7 @@ def bench_backend(backend, sizes, args):
         for S, (compiles, n_buckets) in fleet_compiles.items():
             assert compiles <= 3 * n_buckets, \
                 f"S={S}: {compiles} fleet traces for {n_buckets} buckets " \
-                f"(must be <= 3/bucket)"
+                f"(must be <= 3/bucket); retrace causes: {fleet_retraces}"
         if len(fleet_compiles) > 1:
             vals = set(fleet_compiles.values())
             assert len(vals) == 1, \
@@ -423,6 +439,11 @@ def main(argv=None):
     ap.add_argument("--chaos", action="store_true",
                     help="add a journaled kill-and-recover row (fault "
                     "injection): recovery time + goodput under faults")
+    ap.add_argument("--debug-nans", action="store_true",
+                    help="wrap the three fleet block programs in a "
+                    "finite-guard: every float leaf entering/leaving "
+                    "them is checked; raises NonFiniteError naming the "
+                    "program and leaf (one host sync per call)")
     ap.add_argument("--out", default="BENCH_fleet.json")
     args = ap.parse_args(argv)
 
@@ -472,6 +493,12 @@ def main(argv=None):
         elif r.get("mode") == "fleet_mesh":
             summary[f"{r['backend']}_S{r['S']}_mesh{r['mesh_devices']}"
                     f"_aggregate_sps"] = r["suggests_per_sec_aggregate"]
+        elif r.get("mode") == "fleet":
+            summary[f"{r['backend']}_S{r['S']}_retrace_causes"] = \
+                r["retrace_causes"]
+            if "nan_guard" in r:
+                summary[f"{r['backend']}_S{r['S']}_nan_guard_checks"] = \
+                    r["nan_guard"]["n_guard_checks"]
         elif r.get("mode") == "fleet_chaos":
             summary[f"{r['backend']}_S{r['S']}_chaos_replay_ms_per"
                     f"_100_trials"] = r["replay_ms_per_100_trials"]
@@ -484,6 +511,8 @@ def main(argv=None):
             summary[f"{r['backend']}_S{r['S']}_chaos_deadline_miss"] = \
                 r["deadline_miss"]
             summary[f"{r['backend']}_S{r['S']}_chaos_shed"] = r["shed"]
+            summary[f"{r['backend']}_S{r['S']}_chaos_retrace_causes"] = \
+                r["retrace_causes"]
 
     record = {
         "bench": "fleet_throughput",

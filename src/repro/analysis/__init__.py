@@ -1,0 +1,41 @@
+"""Static invariant linter + runtime trace-discipline sanitizers.
+
+``python -m repro.analysis`` runs five AST rule families that encode
+the ROADMAP contracts the runtime tests can only spot-check:
+
+* ``wal-before-state``      — journal append dominates the state change
+* ``use-after-donate``      — donated buffers are rebound before reads
+* ``recompile-hazard``      — jit keys never derive from live studies
+* ``host-leak-into-trace``  — no host sync / host state under a trace
+* ``nan-hazard``            — benign-row (_FAR) finiteness in carries
+
+The runtime half lives in :mod:`repro.analysis.runtime` (opt-in NaN
+guard for the fleet block programs) and in
+:class:`repro.engine.cache.CountingJit`'s retrace sanitizer, which
+classifies *why* each retrace happened.
+"""
+from .baseline import Baseline
+from .core import Finding, Project, Rule, load_project
+from .report import Report, run_rules
+from .rules_donate import UseAfterDonateRule
+from .rules_nan import NanHazardRule
+from .rules_trace import HostLeakRule, RecompileHazardRule
+from .rules_wal import WalBeforeStateRule
+
+#: the registered rule set, in documentation order
+ALL_RULES = (
+    WalBeforeStateRule(),
+    UseAfterDonateRule(),
+    RecompileHazardRule(),
+    HostLeakRule(),
+    NanHazardRule(),
+)
+
+RULE_IDS = tuple(r.id for r in ALL_RULES)
+
+__all__ = [
+    "ALL_RULES", "RULE_IDS", "Baseline", "Finding", "Project", "Report",
+    "Rule", "load_project", "run_rules", "UseAfterDonateRule",
+    "NanHazardRule", "HostLeakRule", "RecompileHazardRule",
+    "WalBeforeStateRule",
+]

@@ -1,0 +1,492 @@
+"""Core of the invariant lint engine: findings, rules, project model.
+
+The linter enforces the ROADMAP contracts *statically*: every rule is a
+pure function over parsed ASTs, so a violating call site is caught at
+review time even when no runtime test exercises it.  The model is
+deliberately small:
+
+* :class:`Finding` — one violation (rule id, file:line, severity,
+  message, enclosing function, source snippet).
+* :class:`Rule` — a named check run once per module with the whole
+  :class:`Project` available for cross-module facts.
+* :class:`ModuleInfo` — one parsed file plus its inline suppressions.
+* :class:`Project` — all modules, a bare-name function table, and the
+  *traced closure*: the set of functions reachable from any function
+  handed to ``CountingJit`` / ``jax.jit`` / ``shard_map`` / ``vmap`` /
+  ``lax.while_loop``-family combinators.  Trace-discipline rules
+  (host-leak, nan-hazard) scope themselves to that closure.
+
+Name resolution is heuristic by design (bare last-segment matching,
+same-module candidates preferred).  False positives are expected to be
+*triaged*, not silenced: either fix the code, or suppress with a reason
+(inline ``# repro: allow[rule-id] reason`` or a baseline entry — both
+reject empty reasons).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+SEV_ERROR = "error"
+SEV_WARNING = "warning"
+
+# inline suppression: ``# repro: allow[rule-id] reason text``
+_ALLOW_RE = re.compile(r"#\s*repro:\s*allow\[([a-z0-9-]+)\]\s*(.*)$")
+
+
+@dataclasses.dataclass
+class Finding:
+    rule: str
+    file: str                 # repo-relative path
+    line: int
+    severity: str
+    message: str
+    func: str = ""            # enclosing function qualname ("" = module)
+    snippet: str = ""         # stripped source line (baseline matching)
+
+    def key(self) -> Tuple[str, str, str, str]:
+        """Line-number-free identity used for baseline matching."""
+        return (self.rule, self.file, self.func, self.snippet)
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def format(self) -> str:
+        where = f" (in {self.func})" if self.func else ""
+        return (f"{self.file}:{self.line}: [{self.rule}] "
+                f"{self.severity}: {self.message}{where}")
+
+
+class Rule:
+    """Base class: subclasses set ``id``/``severity`` and implement
+    :meth:`run`."""
+    id: str = ""
+    severity: str = SEV_ERROR
+    doc: str = ""
+
+    def run(self, module: "ModuleInfo", project: "Project") -> List[Finding]:
+        raise NotImplementedError
+
+
+# --------------------------------------------------------------------------
+# AST helpers
+# --------------------------------------------------------------------------
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for Name/Attribute chains, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def last_segment(node: ast.AST) -> Optional[str]:
+    """Final attribute/name of a call target: ``self.x.append`` → append."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def call_target(call: ast.Call) -> Optional[str]:
+    return last_segment(call.func)
+
+
+def const_int_tuple(node: ast.AST) -> Optional[Tuple[int, ...]]:
+    """Evaluate a literal tuple/list of ints (``donate_argnums=(5, 6)``)."""
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for el in node.elts:
+            if isinstance(el, ast.Constant) and isinstance(el.value, int):
+                out.append(el.value)
+            else:
+                return None
+        return tuple(out)
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return (node.value,)
+    return None
+
+
+def keyword_arg(call: ast.Call, name: str) -> Optional[ast.AST]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+class _Parented(ast.NodeVisitor):
+    """Annotate every node with ``._parent`` (rules walk upward for
+    context, e.g. "is this inf literal inside a jnp.where call?")."""
+
+    def generic_visit(self, node):
+        for child in ast.iter_child_nodes(node):
+            child._parent = node          # type: ignore[attr-defined]
+        super().generic_visit(node)
+
+
+def parent_of(node: ast.AST) -> Optional[ast.AST]:
+    return getattr(node, "_parent", None)
+
+
+def ancestors(node: ast.AST) -> Iterable[ast.AST]:
+    cur = parent_of(node)
+    while cur is not None:
+        yield cur
+        cur = parent_of(cur)
+
+
+# --------------------------------------------------------------------------
+# module / project model
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FuncInfo:
+    name: str                       # bare name ("" for lambdas)
+    qualname: str                   # Class.method / outer.<locals>.inner
+    module: "ModuleInfo"
+    node: ast.AST                   # FunctionDef | AsyncFunctionDef | Lambda
+    is_method: bool = False         # first param is self/cls
+    static_params: Set[str] = dataclasses.field(default_factory=set)
+
+    def params(self) -> List[str]:
+        a = self.node.args
+        names = [p.arg for p in a.posonlyargs + a.args]
+        return names
+
+
+class ModuleInfo:
+    def __init__(self, path: Path, rel: str, source: str):
+        self.path = path
+        self.rel = rel
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=str(path))
+        _Parented().visit(self.tree)
+        # line → (rule-id, reason) inline suppressions
+        self.allows: Dict[int, Tuple[str, str]] = {}
+        for i, text in enumerate(self.lines, start=1):
+            m = _ALLOW_RE.search(text)
+            if m:
+                self.allows[i] = (m.group(1), m.group(2).strip())
+
+    def line_text(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1].strip()
+        return ""
+
+    def finding(self, rule: Rule, node: ast.AST, message: str,
+                func: str = "", severity: Optional[str] = None) -> Finding:
+        line = getattr(node, "lineno", 1)
+        return Finding(rule=rule.id, file=self.rel, line=line,
+                       severity=severity or rule.severity, message=message,
+                       func=func, snippet=self.line_text(line))
+
+    def allow_for(self, finding: Finding) -> Optional[Tuple[str, str]]:
+        """Inline allow covering this finding (same or previous line)."""
+        for ln in (finding.line, finding.line - 1):
+            ent = self.allows.get(ln)
+            if ent and ent[0] == finding.rule:
+                return ent
+        return None
+
+
+# combinators whose first argument becomes traced code
+_TRACE_WRAPPERS_ARG0 = {
+    "CountingJit", "jit", "vmap", "pmap", "grad", "value_and_grad",
+    "shard_map", "pallas_call", "checkpoint", "custom_jvp", "custom_vjp",
+    "scan",
+}
+# (name → indices of function-valued args)
+_TRACE_WRAPPERS_MULTI = {
+    "while_loop": (0, 1),
+    "cond": (1, 2),
+    "fori_loop": (2,),
+}
+
+
+class Project:
+    """All parsed modules plus cross-module derived facts."""
+
+    def __init__(self, modules: Sequence[ModuleInfo]):
+        self.modules = list(modules)
+        # bare function name → candidates (module-order stable)
+        self.functions: Dict[str, List[FuncInfo]] = {}
+        self._func_by_node: Dict[int, FuncInfo] = {}
+        for mod in self.modules:
+            self._index_functions(mod)
+        # traced closure (all jit-family roots) and the while_loop-carry
+        # closure (nan rule scope)
+        self.traced: Set[int] = set()           # id(node) of FuncInfo.node
+        self.while_closure: Set[int] = set()
+        self._build_traced_closure()
+
+    # -------------------------------------------------- function table
+    def _index_functions(self, mod: ModuleInfo) -> None:
+        def visit(node: ast.AST, qual: str, in_class: bool):
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    q = f"{qual}.{child.name}" if qual else child.name
+                    args = child.args
+                    names = [p.arg for p in args.posonlyargs + args.args]
+                    fi = FuncInfo(name=child.name, qualname=q, module=mod,
+                                  node=child,
+                                  is_method=in_class and bool(names)
+                                  and names[0] in ("self", "cls"))
+                    self.functions.setdefault(child.name, []).append(fi)
+                    self._func_by_node[id(child)] = fi
+                    visit(child, q, in_class=False)
+                elif isinstance(child, ast.ClassDef):
+                    q = f"{qual}.{child.name}" if qual else child.name
+                    visit(child, q, in_class=True)
+                else:
+                    visit(child, qual, in_class)
+        visit(mod.tree, "", False)
+
+    def func_for_node(self, node: ast.AST) -> Optional[FuncInfo]:
+        return self._func_by_node.get(id(node))
+
+    def enclosing_function(self, node: ast.AST) -> str:
+        for anc in ancestors(node):
+            fi = self._func_by_node.get(id(anc))
+            if fi is not None:
+                return fi.qualname
+        return ""
+
+    def resolve(self, expr: ast.AST, mod: ModuleInfo,
+                encl: Optional[ast.AST] = None,
+                depth: int = 0) -> List[FuncInfo]:
+        """Resolve a function-valued expression to candidate defs.
+
+        Resolution is deliberately conservative — over-resolving a
+        common name (``step``, ``append``) would taint whole host
+        subsystems into the traced closure:
+
+        * bare names: the *enclosing function's* locals first (nested
+          defs, ``f = partial(g, ...)``-style rebindings), then
+          module-level defs, then a global match only when the name is
+          unique project-wide;
+        * ``self.X``: same-module definitions only;
+        * other dotted attributes: same module, else unique-global;
+        * ``functools.partial(f, ...)`` unwraps to ``f``; inline lambdas
+          resolve to themselves.
+        """
+        if depth > 4:
+            return []
+        if isinstance(expr, ast.Lambda):
+            fi = self._func_by_node.get(id(expr))
+            if fi is None:
+                fi = FuncInfo(name="", qualname="<lambda>", module=mod,
+                              node=expr)
+                self._func_by_node[id(expr)] = fi
+            return [fi]
+        if isinstance(expr, ast.Call) and call_target(expr) == "partial":
+            return self.resolve(expr.args[0], mod, encl, depth + 1) \
+                if expr.args else []
+        if isinstance(expr, ast.Name):
+            if encl is not None:
+                hit = self._resolve_local(expr.id, encl, mod, depth)
+                if hit is not None:
+                    return hit
+            cands = self.functions.get(expr.id, [])
+            local = [c for c in cands if c.module is mod]
+            if local:
+                return local
+            return cands if len(cands) == 1 else []
+        if isinstance(expr, ast.Attribute):
+            chain = dotted_name(expr)
+            cands = self.functions.get(expr.attr, [])
+            local = [c for c in cands if c.module is mod]
+            if chain is not None and chain.startswith(("self.", "cls.")) \
+                    and chain.count(".") == 1:
+                return local
+            if local:
+                return local
+            return cands if len(cands) == 1 else []
+        return []
+
+    def _resolve_local(self, name: str, encl: ast.AST, mod: ModuleInfo,
+                      depth: int) -> Optional[List[FuncInfo]]:
+        """Locals of ``encl`` shadow the tables: a nested def wins, and a
+        ``name = <expr>`` assignment resolves through its value.  Returns
+        None when ``name`` is not bound locally."""
+        for node in ast.walk(encl):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node is not encl and node.name == name:
+                fi = self._func_by_node.get(id(node))
+                return [fi] if fi else []
+            if isinstance(node, ast.Assign):
+                for t in node.targets:
+                    if isinstance(t, ast.Name) and t.id == name:
+                        return self.resolve(node.value, mod, encl,
+                                            depth + 1)
+        # a parameter of the enclosing function: opaque, don't guess
+        args = getattr(encl, "args", None)
+        if args is not None:
+            params = {p.arg for p in args.posonlyargs + args.args
+                      + args.kwonlyargs}
+            if name in params:
+                return []
+        return None
+
+    # -------------------------------------------------- traced closure
+    def _trace_roots(self) -> List[Tuple[FuncInfo, ast.Call, int]]:
+        """(func, wrapping call, arg position) for every combinator use."""
+        roots = []
+        for mod in self.modules:
+            for node in ast.walk(mod.tree):
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    # decorator forms: @jax.jit / @jit /
+                    # @functools.partial(jax.jit, static_argnums=...)
+                    for dec in node.decorator_list:
+                        call = None
+                        if isinstance(dec, ast.Call) \
+                                and call_target(dec) == "partial" \
+                                and dec.args \
+                                and last_segment(dec.args[0]) in \
+                                _TRACE_WRAPPERS_ARG0:
+                            call = dec
+                            wrapper = last_segment(dec.args[0])
+                        elif last_segment(dec) in _TRACE_WRAPPERS_ARG0:
+                            wrapper = last_segment(dec)
+                            call = ast.Call(func=dec, args=[], keywords=[])
+                        elif isinstance(dec, ast.Call) \
+                                and call_target(dec) in _TRACE_WRAPPERS_ARG0:
+                            wrapper = call_target(dec)
+                            call = dec
+                        else:
+                            continue
+                        fi = self._func_by_node.get(id(node))
+                        if fi is not None:
+                            call._trace_wrapper = wrapper  # type: ignore
+                            roots.append((fi, call, 0))
+                    continue
+                if not isinstance(node, ast.Call):
+                    continue
+                tgt = call_target(node)
+                if tgt in _TRACE_WRAPPERS_ARG0:
+                    idxs: Tuple[int, ...] = (0,)
+                elif tgt in _TRACE_WRAPPERS_MULTI:
+                    idxs = _TRACE_WRAPPERS_MULTI[tgt]
+                else:
+                    continue
+                encl = self._enclosing_funcdef(node)
+                for i in idxs:
+                    if i < len(node.args):
+                        for fi in self.resolve(node.args[i], mod, encl):
+                            roots.append((fi, node, i))
+        return roots
+
+    def _enclosing_funcdef(self, node: ast.AST) -> Optional[ast.AST]:
+        for anc in ancestors(node):
+            if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return anc
+        return None
+
+    def _attach_static_params(self, fi: FuncInfo, call: ast.Call) -> None:
+        """Record which params of a jit root are static (their values are
+        legal subjects for Python control flow inside the trace)."""
+        kw = keyword_arg(call, "static_argnums")
+        nums = const_int_tuple(kw) if kw is not None else None
+        if not nums:
+            return
+        params = fi.params()
+        # a bound-method root (CountingJit(self._impl)) drops ``self`` at
+        # call time, so static position i names param i+1
+        off = 1 if (params and params[0] in ("self", "cls")) else 0
+        for n in nums:
+            if 0 <= n + off < len(params):
+                fi.static_params.add(params[n + off])
+
+    def _expand(self, seed: Iterable[FuncInfo]) -> Set[int]:
+        """Transitive closure over calls from ``seed``.
+
+        Follows bare-name calls (resolved against the caller's locals
+        first), ``self.X`` method calls (same module), and
+        function-valued arguments handed to ``*_jit`` program objects /
+        ``partial``.  Everything else — ``obj.method(...)`` on arbitrary
+        receivers — is opaque: following those by bare last-segment name
+        would drag host subsystems into the traced set via names like
+        ``append`` or ``step``."""
+        seen: Set[int] = set()
+        frontier = list(seed)
+        while frontier:
+            fi = frontier.pop()
+            if id(fi.node) in seen:
+                continue
+            seen.add(id(fi.node))
+            encl = fi.node
+            for node in ast.walk(fi.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                tgt = call_target(node)
+                exprs: List[ast.AST] = []
+                fn = node.func
+                if isinstance(fn, ast.Name):
+                    exprs.append(fn)
+                elif isinstance(fn, ast.Attribute):
+                    chain = dotted_name(fn)
+                    if chain is not None and chain.startswith(
+                            ("self.", "cls.")) and chain.count(".") == 1:
+                        exprs.append(fn)
+                if tgt == "partial" and node.args:
+                    exprs.append(node.args[0])
+                if tgt is not None and (tgt.endswith("_jit")
+                                        or tgt == "jitted"):
+                    # calls *through* a jit program object: its function-
+                    # valued args (batched objectives) are traced too
+                    exprs.extend(a for a in node.args
+                                 if isinstance(a, (ast.Name, ast.Lambda)))
+                for expr in exprs:
+                    for cand in self.resolve(expr, fi.module, encl):
+                        if id(cand.node) not in seen:
+                            frontier.append(cand)
+        return seen
+
+    def _build_traced_closure(self) -> None:
+        roots = self._trace_roots()
+        all_seed, while_seed = [], []
+        for fi, call, pos in roots:
+            all_seed.append(fi)
+            tgt = getattr(call, "_trace_wrapper", None) or call_target(call)
+            if tgt in ("CountingJit", "jit"):
+                self._attach_static_params(fi, call)
+            if tgt in ("while_loop", "scan", "fori_loop"):
+                while_seed.append(fi)
+        self.traced = self._expand(all_seed)
+        self.while_closure = self._expand(while_seed)
+
+    def is_traced(self, funcdef: ast.AST) -> bool:
+        return id(funcdef) in self.traced
+
+    def in_while_closure(self, funcdef: ast.AST) -> bool:
+        return id(funcdef) in self.while_closure
+
+
+def load_project(paths: Sequence[Path], root: Path,
+                 exclude: Sequence[str] = ("tests",)) -> Project:
+    files: List[Path] = []
+    for p in paths:
+        if p.is_file() and p.suffix == ".py":
+            files.append(p)
+        elif p.is_dir():
+            files.extend(sorted(p.rglob("*.py")))
+    mods = []
+    for f in files:
+        rel = str(f.resolve().relative_to(root.resolve())) \
+            if f.resolve().is_relative_to(root.resolve()) else str(f)
+        if any(part in exclude for part in Path(rel).parts):
+            continue
+        try:
+            src = f.read_text()
+            mods.append(ModuleInfo(f, rel, src))
+        except (SyntaxError, UnicodeDecodeError):
+            continue
+    return Project(mods)

@@ -1,0 +1,126 @@
+"""use-after-donate: never read a buffer after donating it to XLA.
+
+``donate_argnums`` hands the argument's device buffer to the compiled
+program for in-place reuse; after the call the Python reference points
+at freed storage (on non-CPU backends — CPU masks the bug, which is
+exactly why it needs a static rule).  The contract (ROADMAP: fused-ask
+invariants) is *rebind from the return, then read*.
+
+Detection is two-pass per module: pass 1 collects every name bound to a
+``CountingJit(..., donate_argnums=(...))`` (or ``jax.jit`` equivalent)
+with literal argnums; pass 2 scans each function for calls through those
+names, taints the donated-position arguments that are plain name/
+attribute paths, and flags any later *load* of a tainted path that is
+not preceded by a rebinding store (line-ordered within the function —
+a deliberate approximation: journal-grade precision is not needed to
+catch the realistic "kept using self._chol after the fused call" slip).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Tuple
+
+from .core import (Finding, ModuleInfo, Project, Rule, call_target,
+                   const_int_tuple, dotted_name, keyword_arg)
+
+
+def _donating_assignments(module: ModuleInfo) -> Dict[str, Tuple[int, ...]]:
+    """last-segment target name → donated positions."""
+    out: Dict[str, Tuple[int, ...]] = {}
+    for node in ast.walk(module.tree):
+        if not isinstance(node, ast.Assign):
+            continue
+        call = node.value
+        if not isinstance(call, ast.Call):
+            continue
+        if call_target(call) not in ("CountingJit", "jit"):
+            continue
+        kw = keyword_arg(call, "donate_argnums")
+        if kw is None:
+            continue
+        nums = const_int_tuple(kw)
+        if not nums:
+            continue
+        for t in node.targets:
+            name = t.attr if isinstance(t, ast.Attribute) else (
+                t.id if isinstance(t, ast.Name) else None)
+            if name:
+                out[name] = nums
+    return out
+
+
+class UseAfterDonateRule(Rule):
+    id = "use-after-donate"
+    severity = "error"
+    doc = ("arguments at donate_argnums positions must be rebound from "
+           "the program's return before any further read")
+
+    def run(self, module: ModuleInfo, project: Project) -> List[Finding]:
+        registry = _donating_assignments(module)
+        if not registry:
+            return []
+        findings: List[Finding] = []
+        for node in ast.walk(module.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            fi = project.func_for_node(node)
+            qual = fi.qualname if fi else node.name
+            self._check_function(node, registry, module, qual, findings)
+        return findings
+
+    def _check_function(self, fn, registry, module: ModuleInfo, qual: str,
+                        findings: List[Finding]) -> None:
+        # (call line, call end line, jit name, donated path)
+        donations: List[Tuple[int, int, str, str]] = []
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            name = call_target(node)
+            if name not in registry:
+                continue
+            end = getattr(node, "end_lineno", None) or node.lineno
+            for pos in registry[name]:
+                if pos >= len(node.args):
+                    continue
+                path = dotted_name(node.args[pos])
+                if path is None:
+                    continue   # inline expression: nothing to reuse later
+                donations.append((node.lineno, end, name, path))
+        if not donations:
+            return
+
+        loads: Dict[str, List[int]] = {}
+        stores: Dict[str, List[int]] = {}
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.Name, ast.Attribute)):
+                path = dotted_name(node)
+                if path is None:
+                    continue
+                ctx = getattr(node, "ctx", None)
+                if isinstance(ctx, ast.Store):
+                    stores.setdefault(path, []).append(node.lineno)
+                elif isinstance(ctx, ast.Load):
+                    # an Attribute load that is merely the spine of a
+                    # stored attribute (self._chol in ``self._chol = ..``)
+                    # carries Store ctx on the outer node only; the inner
+                    # Name is Load.  dotted_name() on the outer node
+                    # already covered it, so only record maximal chains.
+                    par = getattr(node, "_parent", None)
+                    if isinstance(par, ast.Attribute):
+                        continue
+                    loads.setdefault(path, []).append(node.lineno)
+        for call_line, call_end, jit_name, path in donations:
+            rebinds = [ln for ln in stores.get(path, ()) if ln >= call_line]
+            first_rebind = min(rebinds) if rebinds else None
+            for ln in loads.get(path, ()):
+                if ln <= call_end:
+                    continue
+                if first_rebind is not None and ln >= first_rebind:
+                    continue
+                findings.append(Finding(
+                    rule=self.id, file=module.rel, line=ln,
+                    severity=self.severity,
+                    message=(f"read of {path} after it was donated to "
+                             f"{jit_name} (line {call_line}) without "
+                             f"rebinding from the return"),
+                    func=qual, snippet=module.line_text(ln)))

@@ -1,0 +1,132 @@
+"""nan-hazard: keep non-finite values out of shared while_loop carries.
+
+The fleet's lockstep ``while_loop``s (L-BFGS-B, line search, MSO tail)
+advance *every* slot row each round; the benign-row invariant (ROADMAP:
+``_FAR`` idle pattern) only holds if no carry leaf can turn NaN/Inf —
+one poisoned row stalls or corrupts the whole block.  Scope: functions
+in the while-loop closure (bodies/conds handed to ``lax.while_loop`` /
+``scan`` / ``fori_loop`` plus their callees).  Flagged:
+
+* non-finite literals (``jnp.inf`` / ``np.inf`` / ``float("inf")`` /
+  ``nan``) outside masking contexts — comparisons, ``jnp.where``,
+  ``isfinite``/``isnan``, ``nan_to_num`` keep the sentinel out of the
+  carry; a bare literal flowing into arithmetic does not;
+* divisions whose denominator is a plain variable (no ``jnp.maximum`` /
+  ``jnp.where`` / eps guard): 0/0 in a *frozen* row still propagates
+  through the shared carry even when masked later.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from .core import (Finding, ModuleInfo, Project, Rule, ancestors,
+                   call_target, dotted_name)
+
+# call targets that neutralize a non-finite sentinel or guard a division
+MASKING_CALLS = {"where", "isfinite", "isnan", "isinf", "isposinf",
+                 "isneginf", "nan_to_num", "clip", "minimum", "maximum",
+                 "select", "nanmin", "nanmax", "nan_to_num"}
+
+
+def _is_nonfinite_literal(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Attribute) and node.attr in ("inf", "nan"):
+        return dotted_name(node) or node.attr
+    if isinstance(node, ast.Constant) and isinstance(node.value, float):
+        if node.value != node.value:
+            return "nan"
+        if node.value in (float("inf"), float("-inf")):
+            return "inf"
+    if isinstance(node, ast.Call) and call_target(node) == "float" \
+            and node.args and isinstance(node.args[0], ast.Constant) \
+            and str(node.args[0].value).lstrip("+-").lower() in (
+                "inf", "infinity", "nan"):
+        return f'float("{node.args[0].value}")'
+    return None
+
+
+def _in_masking_context(node: ast.AST) -> bool:
+    for anc in ancestors(node):
+        if isinstance(anc, ast.Compare):
+            return True
+        if isinstance(anc, ast.Call) and call_target(anc) in MASKING_CALLS:
+            return True
+        if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef,
+                            ast.Lambda)):
+            break
+    return False
+
+
+def _guarded_denominator(node: ast.AST) -> bool:
+    """A denominator that cannot be (exactly) zero: guarded by
+    maximum/where/clip, offset by a positive literal, or itself a
+    literal."""
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, ast.Call) and call_target(node) in MASKING_CALLS:
+        return True
+    if isinstance(node, ast.Call) and call_target(node) in (
+            "sqrt", "exp", "maximum", "float"):
+        return True
+    if isinstance(node, ast.BinOp) and isinstance(node.op, (ast.Add,
+                                                            ast.Mult)):
+        return _guarded_denominator(node.left) \
+            or _guarded_denominator(node.right)
+    if isinstance(node, ast.UnaryOp):
+        return _guarded_denominator(node.operand)
+    return False
+
+
+class NanHazardRule(Rule):
+    id = "nan-hazard"
+    severity = "warning"
+    doc = ("no unmasked non-finite literals or unguarded divisions in "
+           "while_loop carry code (the _FAR benign-row invariant)")
+
+    def run(self, module: ModuleInfo, project: Project) -> List[Finding]:
+        findings: List[Finding] = []
+        for node in ast.walk(module.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                     ast.Lambda)):
+                continue
+            if not project.in_while_closure(node):
+                continue
+            fi = project.func_for_node(node)
+            qual = fi.qualname if fi else getattr(node, "name", "<lambda>")
+            # local name → assigned value, so a denominator guarded at its
+            # definition site (``denom = jnp.maximum(...)``) passes
+            assigns = {}
+            for n in ast.walk(node):
+                if isinstance(n, ast.Assign) and len(n.targets) == 1 \
+                        and isinstance(n.targets[0], ast.Name):
+                    assigns[n.targets[0].id] = n.value
+            for n in ast.walk(node):
+                if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                        and n is not node \
+                        and project.in_while_closure(n):
+                    continue       # reported under its own pass
+                lit = _is_nonfinite_literal(n)
+                if lit is not None and not _in_masking_context(n):
+                    par = getattr(n, "_parent", None)
+                    if _is_nonfinite_literal(par) if par else False:
+                        continue
+                    findings.append(module.finding(
+                        self, n,
+                        f"non-finite literal {lit} outside a masking "
+                        f"context may flow into a shared while_loop "
+                        f"carry", func=qual))
+                elif isinstance(n, ast.BinOp) and isinstance(n.op, ast.Div):
+                    den = n.right
+                    base = den.value if isinstance(
+                        den, ast.Subscript) else den
+                    if isinstance(base, ast.Name) and base.id in assigns:
+                        den = assigns[base.id]
+                    if not _guarded_denominator(den):
+                        findings.append(module.finding(
+                            self, n,
+                            f"division by unguarded value "
+                            f"`{dotted_name(n.right) or 'expr'}` in "
+                            f"while_loop carry code; clamp with "
+                            f"jnp.maximum/where before dividing",
+                            func=qual))
+        return findings

@@ -1,0 +1,267 @@
+"""Trace-discipline rules: recompile-hazard and host-leak-into-trace.
+
+recompile-hazard — "never key a program on live studies" (ROADMAP:
+compile-economy invariants).  A jit cache key may depend on the padded
+shape bucket and slot count, never on live-study count, occupancy,
+tenancy/QoS state, or mesh placement; those change every step and each
+distinct value mints a fresh executable.  Flagged:
+
+* live-state expressions (``len(self._studies)``, ``self._device_
+  occupancy()``, a bare ``self._rung`` …) appearing *as arguments* to a
+  jit-wrapped call — Python scalars become trace constants, so every new
+  value retraces;
+* functions handed to ``CountingJit``/``jax.jit`` whose bodies read
+  live scheduler state (closure capture bakes it into the trace);
+* jit wrappers constructed outside ``__init__``/module scope (warning:
+  a per-call wrapper defeats the cache entirely).
+
+host-leak-into-trace — "faults never traced / host state stays host"
+(ROADMAP: fleet + robustness invariants).  Inside the traced closure
+(functions reachable from any jit/vmap/while_loop root) flag:
+
+* ``.item()`` / ``float()/int()/bool()`` on non-constants /
+  ``np.asarray``-family calls — host sync inside the trace;
+* Python ``if``/``while``/``assert`` on values that are neither static
+  jit params nor shape/dtype/config attributes — concretization errors
+  or silent trace specialization;
+* reads of host-side robustness state (``journal``, ``fault_injector``,
+  recovery/quarantine/service fields) — the fault plane must never
+  leak into compiled code.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from .core import (Finding, ModuleInfo, Project, Rule, ancestors,
+                   call_target, dotted_name, last_segment)
+
+# host scheduler / service state a program may never be keyed on
+LIVE_STATE_ATTRS = {
+    "_studies", "_queue", "_blocks", "samplers", "_delayed", "_tenants",
+    "trials", "studies", "queue", "_rung", "deficit", "pending",
+    "_lat", "n_live",
+}
+LIVE_STATE_CALLS = {"_device_occupancy", "queue_depth", "live_studies"}
+
+# host-only robustness state that must never be read under a trace
+HOST_STATE_ATTRS = {
+    "journal", "fault_injector", "_rung", "shed", "parked", "degraded",
+    "_draining", "_delayed", "recovered", "_preempt",
+}
+
+# names conventionally static inside traced code (configs, plans, axes)
+STATIC_NAME_ALLOW = {
+    "self", "cls", "cfg", "config", "opts", "options", "plan", "backend",
+    "dtype", "dt", "axis", "axis_name", "mesh", "spec", "kernel",
+    "fit_opts", "interpret", "debug", "precision", "mode",
+}
+# attribute tails that are static facts about an array/config, fine to
+# branch on at trace time
+STATIC_ATTR_TAILS = {
+    "ndim", "shape", "dtype", "size", "name", "axis_names", "devices",
+    "maxiter", "m", "dim", "n_restarts", "batch", "bucket", "slots",
+}
+STATIC_CALLS = {"len", "isinstance", "hasattr", "getattr", "callable",
+                "issubclass", "range", "min", "max", "tuple", "abs"}
+
+NUMPY_HOST_CALLS = {"asarray", "array", "ascontiguousarray"}
+
+
+def _jit_registry(module: ModuleInfo) -> Set[str]:
+    """Names bound to CountingJit/jax.jit objects in this module."""
+    out: Set[str] = set()
+    for node in ast.walk(module.tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            if call_target(node.value) in ("CountingJit", "jit"):
+                for t in node.targets:
+                    name = t.attr if isinstance(t, ast.Attribute) else (
+                        t.id if isinstance(t, ast.Name) else None)
+                    if name:
+                        out.add(name)
+    return out
+
+
+def _live_state_expr(node: ast.AST) -> Optional[str]:
+    """Describe the first live-state read inside ``node``, if any."""
+    for n in ast.walk(node):
+        if isinstance(n, ast.Call):
+            tgt = call_target(n)
+            if tgt in LIVE_STATE_CALLS:
+                return f"{dotted_name(n.func) or tgt}()"
+        if isinstance(n, ast.Attribute) and n.attr in LIVE_STATE_ATTRS:
+            par = getattr(n, "_parent", None)
+            if isinstance(par, ast.Attribute):
+                continue
+            return dotted_name(n) or n.attr
+    return None
+
+
+class RecompileHazardRule(Rule):
+    id = "recompile-hazard"
+    severity = "error"
+    doc = ("jit cache keys must not derive from live-study count, "
+           "occupancy, tenancy, or mesh placement")
+
+    def run(self, module: ModuleInfo, project: Project) -> List[Finding]:
+        findings: List[Finding] = []
+        registry = _jit_registry(module)
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            tgt = call_target(node)
+            qual = project.enclosing_function(node)
+            if tgt in registry and tgt not in ("CountingJit", "jit"):
+                for arg in list(node.args) + [k.value for k in node.keywords]:
+                    desc = _live_state_expr(arg)
+                    if desc is not None:
+                        findings.append(module.finding(
+                            self, arg,
+                            f"argument derives from live scheduler state "
+                            f"({desc}) in call to jit program {tgt} — "
+                            f"cache key must not depend on live studies",
+                            func=qual))
+            if tgt in ("CountingJit", "jit"):
+                # closure capture of live state by the traced fn
+                if node.args:
+                    for fi in project.resolve(node.args[0], module):
+                        desc = _live_state_expr(fi.node)
+                        if desc is not None:
+                            findings.append(module.finding(
+                                self, node,
+                                f"function {fi.qualname} passed to {tgt} "
+                                f"reads live scheduler state ({desc}); "
+                                f"closure capture bakes it into the "
+                                f"compiled program",
+                                func=qual))
+                # construction site discipline
+                encl = qual.rsplit(".", 1)[-1] if qual else ""
+                if qual and encl != "__init__" \
+                        and not encl.startswith(("_build", "_make", "make_")):
+                    findings.append(module.finding(
+                        self, node,
+                        f"{tgt} constructed inside {qual}; per-call jit "
+                        f"wrappers defeat the compile cache — build "
+                        f"programs once in __init__/module scope",
+                        func=qual, severity="warning"))
+        return findings
+
+
+def _is_static_test(test: ast.AST, static_params: Set[str]) -> bool:
+    """True when every leaf of a Python-control-flow test is trace-static:
+    constants, static jit params, config names, shape/dtype attributes,
+    ``is None`` checks, and static builtins."""
+    skip: set = set()
+    for n in ast.walk(test):
+        if isinstance(n, ast.Compare) and all(
+                isinstance(op, (ast.Is, ast.IsNot)) for op in n.ops):
+            # identity tests (`x is None`) are structural facts about the
+            # python call, static at trace time by construction
+            for sub in ast.walk(n):
+                skip.add(id(sub))
+    for n in ast.walk(test):
+        if id(n) in skip:
+            continue
+        if isinstance(n, ast.Name):
+            par = getattr(n, "_parent", None)
+            if isinstance(par, ast.Attribute):
+                continue          # judged via the full attribute chain
+            if isinstance(par, ast.Call) and par.func is n:
+                if n.id in STATIC_CALLS:
+                    continue
+                return False
+            if n.id in static_params or n.id in STATIC_NAME_ALLOW:
+                continue
+            return False
+        if isinstance(n, ast.Attribute):
+            par = getattr(n, "_parent", None)
+            if isinstance(par, ast.Attribute):
+                continue
+            if isinstance(par, ast.Call) and par.func is n:
+                continue          # method call: judged by its args
+            chain = dotted_name(n)
+            root = chain.split(".")[0] if chain else None
+            if n.attr in STATIC_ATTR_TAILS:
+                continue
+            if root in static_params or root in STATIC_NAME_ALLOW:
+                continue
+            return False
+    return True
+
+
+class HostLeakRule(Rule):
+    id = "host-leak-into-trace"
+    severity = "error"
+    doc = ("no host sync, Python control flow on traced values, or "
+           "host-state reads inside the traced closure")
+
+    def run(self, module: ModuleInfo, project: Project) -> List[Finding]:
+        findings: List[Finding] = []
+        for node in ast.walk(module.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                     ast.Lambda)):
+                continue
+            if not project.is_traced(node):
+                continue
+            fi = project.func_for_node(node)
+            qual = fi.qualname if fi else getattr(node, "name", "<lambda>")
+            static = fi.static_params if fi else set()
+            self._check_traced(node, static, module, qual, findings,
+                               project)
+        return findings
+
+    def _check_traced(self, fn, static: Set[str], module: ModuleInfo,
+                      qual: str, findings: List[Finding],
+                      project: Project) -> None:
+        body = fn.body if isinstance(fn.body, list) else [fn.body]
+        for node in ast.walk(fn):
+            # don't double-report inside nested defs that are themselves
+            # in the traced set (they get their own pass)
+            if node is not fn and isinstance(
+                    node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and project.is_traced(node):
+                continue
+            if isinstance(node, ast.Call):
+                tgt = call_target(node)
+                if tgt == "item" and isinstance(node.func, ast.Attribute):
+                    findings.append(module.finding(
+                        self, node, ".item() inside traced code forces a "
+                        "host sync per call", func=qual))
+                elif tgt in ("float", "int", "bool") \
+                        and isinstance(node.func, ast.Name) and node.args \
+                        and not isinstance(node.args[0], ast.Constant):
+                    findings.append(module.finding(
+                        self, node,
+                        f"{tgt}() on a traced value concretizes it on "
+                        f"host inside the trace", func=qual))
+                elif tgt in NUMPY_HOST_CALLS \
+                        and isinstance(node.func, ast.Attribute) \
+                        and last_segment(node.func.value) in ("np", "numpy"):
+                    findings.append(module.finding(
+                        self, node,
+                        f"np.{tgt}() inside traced code pulls the value "
+                        f"to host; use jnp", func=qual))
+            elif isinstance(node, (ast.If, ast.While)):
+                if not _is_static_test(node.test, static):
+                    kind = "if" if isinstance(node, ast.If) else "while"
+                    findings.append(module.finding(
+                        self, node.test,
+                        f"Python `{kind}` on a non-static value inside "
+                        f"traced code; use lax.cond/where or mark the "
+                        f"argument static", func=qual))
+            elif isinstance(node, ast.Assert):
+                if not _is_static_test(node.test, static):
+                    findings.append(module.finding(
+                        self, node,
+                        "assert on a traced value: either concretization "
+                        "error or silently compiled away", func=qual))
+            elif isinstance(node, ast.Attribute) \
+                    and node.attr in HOST_STATE_ATTRS:
+                par = getattr(node, "_parent", None)
+                if isinstance(par, ast.Attribute):
+                    continue
+                findings.append(module.finding(
+                    self, node,
+                    f"host robustness state .{node.attr} read inside "
+                    f"traced code; faults/recovery must stay outside "
+                    f"the trace", func=qual))

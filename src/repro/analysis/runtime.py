@@ -1,0 +1,91 @@
+"""Runtime sanitizers: the opt-in fleet NaN guard (``--debug-nans``).
+
+The static ``nan-hazard`` rule proves no *syntactic* path feeds a
+non-finite value into a shared carry; this guard proves the actual
+``_FAR`` benign-row invariant at runtime — every float leaf entering or
+leaving the three fleet block programs (full refit, incremental refit,
+MSO tail) is finite, idle and quarantined rows included.  It costs one
+host sync per program call, so it is strictly opt-in (chaos benches,
+debugging), never the hot path.
+"""
+from __future__ import annotations
+
+from typing import Any, Iterable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class NonFiniteError(AssertionError):
+    """A float leaf crossing a guarded program boundary was NaN/Inf."""
+
+
+def _first_nonfinite(tree: Any) -> Tuple[str, Any]:
+    """(path, leaf) of the first non-finite float leaf, or ("", None)."""
+    leaves = jax.tree_util.tree_leaves_with_path(tree)
+    for path, leaf in leaves:
+        dt = getattr(leaf, "dtype", None)
+        if dt is None or not jnp.issubdtype(dt, jnp.floating):
+            continue
+        if not bool(jnp.all(jnp.isfinite(leaf))):
+            return jax.tree_util.keystr(path), leaf
+    return "", None
+
+
+class FiniteGuard:
+    """Wrap a CountingJit-like callable with finite-checks on every
+    float input and output leaf.  All other attributes (``n_compiles``,
+    ``retrace_summary`` …) pass through, so engine snapshots keep
+    working on the guarded program."""
+
+    def __init__(self, inner, label: str):
+        self._inner = inner
+        self._label = label
+        self.n_guard_checks = 0
+
+    def _check(self, tree: Any, direction: str) -> None:
+        path, leaf = _first_nonfinite(tree)
+        if leaf is not None:
+            raise NonFiniteError(
+                f"non-finite value in {direction} of fleet program "
+                f"'{self._label}' at leaf {path or '<root>'} "
+                f"(shape {getattr(leaf, 'shape', '?')}): the _FAR "
+                f"benign-row invariant is violated — an idle/quarantined "
+                f"slot leaked NaN/Inf into the shared carry")
+
+    def __call__(self, *args: Any, **kwargs: Any):
+        self.n_guard_checks += 1
+        self._check((args, kwargs), "inputs")
+        out = self._inner(*args, **kwargs)
+        self._check(out, "outputs")
+        return out
+
+    def __getattr__(self, name: str):
+        return getattr(self._inner, name)
+
+
+_FLEET_PROGRAMS = ("_full_jit", "_incr_jit", "_mso_jit")
+
+
+def install_nan_guard(fleet_engine) -> Iterable[FiniteGuard]:
+    """Wrap the three fleet block programs in place; returns the guards
+    (idempotent: re-installing over an existing guard is a no-op)."""
+    guards = []
+    for attr in _FLEET_PROGRAMS:
+        prog = getattr(fleet_engine, attr)
+        if isinstance(prog, FiniteGuard):
+            guards.append(prog)
+            continue
+        g = FiniteGuard(prog, attr.strip("_").replace("_jit", ""))
+        setattr(fleet_engine, attr, g)
+        guards.append(g)
+    return guards
+
+
+def nan_guard_stats(fleet_engine) -> dict:
+    """``{"installed": bool, "n_guard_checks": int}`` for summaries."""
+    progs = [getattr(fleet_engine, a, None) for a in _FLEET_PROGRAMS]
+    installed = all(isinstance(p, FiniteGuard) for p in progs)
+    return {"installed": installed,
+            "n_guard_checks": sum(p.n_guard_checks for p in progs
+                                  if isinstance(p, FiniteGuard))}

@@ -39,6 +39,7 @@ from repro.core.lbfgsb import LbfgsbOptions
 from repro.core.mso import MsoOptions, MsoResult, maximize_acqf
 from repro.engine import (AskConfig, AskEngine, EvalEngine, FleetFullError,
                           FleetStudyError, fused_logei_acq, resolve_backend)
+from repro.engine.cache import merge_retrace_reports
 from repro.gp.fit import (fit_gp, pad_bucket_for, standardize,
                           standardize_masked)
 from repro.gp.gpr import with_kinv
@@ -282,9 +283,12 @@ class GPSampler:
         best_x, info = ask.suggest(self._restart_key(),
                                    fit_seed=self.seed + len(self.trials))
         wall = time.perf_counter() - t0
+        eng, ak = self.engine.stats_snapshot(), ask.stats_snapshot()
         return self._record_fused_suggest(
             best_x, info, wall,
-            {**self.engine.stats_snapshot(), **ask.stats_snapshot()})
+            {**eng, **ak,
+             "retraces": merge_retrace_reports(eng["retraces"],
+                                               ak["retraces"])})
 
     def _record_fused_suggest(self, best_x, info, wall, snapshot):
         """Shared stats tail of the fused/fleet suggest paths.  Per-
@@ -406,10 +410,13 @@ class GPSampler:
             return self._suggest_fused()
         best_x, info = res
         wall = time.perf_counter() - t0
+        eng = self._fleet.engine.stats_snapshot()
+        flt = self._fleet.stats_snapshot()
         return self._record_fused_suggest(
             best_x, info, wall,
-            {**self._fleet.engine.stats_snapshot(),
-             **self._fleet.stats_snapshot()})
+            {**eng, **flt,
+             "retraces": merge_retrace_reports(eng["retraces"],
+                                               flt["retraces"])})
 
     # ------------------------------------------------- journal (restart)
     def save(self, path: str):
@@ -890,8 +897,11 @@ class FleetSampler:
         return fs, report
 
     def stats_snapshot(self) -> dict:
-        snap = {**self.engine.stats_snapshot(),
-                **self.fleet.stats_snapshot()}
+        eng, flt = self.engine.stats_snapshot(), self.fleet.stats_snapshot()
+        snap = {**eng, **flt}
+        # both planes report retrace causes; merge rather than shadow
+        snap["retraces"] = merge_retrace_reports(eng["retraces"],
+                                                 flt["retraces"])
         snap["n_degraded"] = sum(s.degraded is not None
                                  for s in self.samplers)
         if self.journal is not None:

@@ -33,7 +33,7 @@ import numpy as np
 from jax.scipy.linalg import cho_solve
 
 from repro.core.lbfgsb import LbfgsbOptions, lbfgsb_minimize
-from repro.engine.cache import CountingJit
+from repro.engine.cache import CountingJit, retrace_report
 from repro.engine.engine import EvalEngine
 from repro.engine.plan import EvalPlan
 from repro.gp.fit import (FIT_OPTS, _FAR, fit_padded_core,
@@ -291,6 +291,8 @@ class AskEngine:
             "n_incr_compiles": self._incr_jit.n_compiles,
             "n_ask_compiles": (self._full_jit.n_compiles
                                + self._incr_jit.n_compiles),
+            "retraces": retrace_report({"full": self._full_jit,
+                                        "incr": self._incr_jit}),
         }
 
     # ------------------------------------------------------- device side

@@ -7,30 +7,64 @@ the acquisition engine and the serving engine build their compiled planes
 from this, which is what makes "compiles per run" a first-class, testable
 metric (the ROADMAP's compilation-discipline requirement).
 
+Beyond counting, the wrapper is a *retrace sanitizer*: every call builds
+a cheap host-side signature of the jit cache key (static-arg values,
+pytree structure, per-leaf shape/dtype/sharding) and, when a call traces,
+diffs that signature against previously traced ones to classify **why**
+— ``first-trace``, ``static-arg``, ``shape``, ``dtype``, ``sharding``,
+``tree-structure``, or ``unknown``.  The classification is exposed via
+:meth:`retrace_summary` and flows into engine ``stats_snapshot()``s and
+the BENCH ``summary`` blocks, so a compile-count assertion failure in CI
+names its cause instead of just its count.
+
 Mesh-sharded callers (the fleet ask plane) pass ``in_shardings``: every
 call then keys the jit cache on the (mesh, PartitionSpec) pair baked in
 here — never on whichever device a host-built input happened to land on,
 and never on which slots are live.  That is what keeps fleet compile
 counts O(#buckets) and independent of the mesh's device count: a block's
 programs are traced once per (bucket, slots) shape per mesh, no matter
-how studies move across devices between calls.
+how studies move across calls.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 
+# cap per-instance event history: retraces are supposed to be rare, and
+# a misbehaving caller must not turn the sanitizer into a memory leak
+_MAX_EVENTS = 256
+
+
+def _leaf_sig(leaf: Any) -> Tuple:
+    """(shape, dtype, sharding) for an array-ish leaf; scalars hash by
+    type (a Python scalar is a weak-typed trace constant)."""
+    shape = getattr(leaf, "shape", None)
+    if shape is None:
+        return ("py", type(leaf).__name__)
+    dtype = str(getattr(leaf, "dtype", ""))
+    sh = getattr(leaf, "sharding", None)
+    return (tuple(shape), dtype, str(sh) if sh is not None else "")
+
 
 class CountingJit:
-    """``jax.jit`` with an exact retrace/compile counter."""
+    """``jax.jit`` with an exact retrace/compile counter and per-retrace
+    cause classification."""
 
     def __init__(self, fn: Callable, *,
                  static_argnums: Sequence[int] = (),
                  donate_argnums: Sequence[int] = (),
                  in_shardings: Optional[Any] = None,
-                 out_shardings: Optional[Any] = None):
+                 out_shardings: Optional[Any] = None,
+                 name: Optional[str] = None):
         self.n_compiles = 0
+        self.n_calls = 0
+        self.name = name or getattr(fn, "__name__", "jit")
+        self._static = tuple(static_argnums)
+        #: signatures of calls that traced, in trace order
+        self._seen: List[Tuple] = []
+        #: why each retrace after the first happened (bounded)
+        self.retrace_events: List[Dict[str, Any]] = []
 
         def counted(*args, **kwargs):
             self.n_compiles += 1          # trace-time side effect
@@ -52,5 +86,123 @@ class CountingJit:
                             donate_argnums=tuple(donate_argnums) or None,
                             **kw)
 
+    # ------------------------------------------------- cache-key signature
+    def _signature(self, args: tuple, kwargs: dict) -> Tuple:
+        """Host-side mirror of the jit cache key: static-arg reprs plus
+        (treedef, leaf shapes/dtypes/shardings) for the dynamic args."""
+        statics = []
+        dynamic = []
+        for i, a in enumerate(args):
+            if i in self._static:
+                try:
+                    statics.append((i, repr(a)))
+                except Exception:
+                    statics.append((i, f"<unreprable {type(a).__name__}>"))
+            else:
+                leaves, treedef = jax.tree_util.tree_flatten(a)
+                dynamic.append((i, str(treedef),
+                                tuple(_leaf_sig(x) for x in leaves)))
+        for k in sorted(kwargs):
+            leaves, treedef = jax.tree_util.tree_flatten(kwargs[k])
+            dynamic.append((k, str(treedef),
+                            tuple(_leaf_sig(x) for x in leaves)))
+        return (tuple(statics), tuple(dynamic))
+
+    @staticmethod
+    def _diff(sig: Tuple, prev: Tuple) -> List[str]:
+        """Which cache-key components differ between two signatures."""
+        kinds = set()
+        statics, dynamic = sig
+        pstatics, pdynamic = prev
+        if statics != pstatics:
+            kinds.add("static-arg")
+        if len(dynamic) != len(pdynamic):
+            kinds.add("tree-structure")
+            return sorted(kinds)
+        for (pos, tree, leaves), (ppos, ptree, pleaves) in zip(dynamic,
+                                                               pdynamic):
+            if pos != ppos or tree != ptree or len(leaves) != len(pleaves):
+                kinds.add("tree-structure")
+                continue
+            for leaf, pleaf in zip(leaves, pleaves):
+                if leaf == pleaf:
+                    continue
+                if leaf[0] == "py" or pleaf[0] == "py":
+                    kinds.add("tree-structure")
+                    continue
+                if leaf[0] != pleaf[0]:
+                    kinds.add("shape")
+                if leaf[1] != pleaf[1]:
+                    kinds.add("dtype")
+                if leaf[2] != pleaf[2]:
+                    kinds.add("sharding")
+        return sorted(kinds)
+
+    def _classify(self, sig: Tuple) -> Tuple[str, str]:
+        """(cause, detail) for a call that traced: diff against the
+        closest previously traced signature."""
+        if not self._seen:
+            return "first-trace", ""
+        best: Optional[List[str]] = None
+        for prev in self._seen:
+            kinds = self._diff(sig, prev)
+            if not kinds:
+                # identical host signature yet it retraced: jit-internal
+                # (e.g. weak-type promotion or a cleared cache)
+                return "unknown", "signature matches an earlier trace"
+            if best is None or len(kinds) < len(best):
+                best = kinds
+        assert best is not None
+        return ("+".join(best) if len(best) > 1 else best[0],
+                "differs from nearest earlier trace in: " + ", ".join(best))
+
+    # ------------------------------------------------------------- call
     def __call__(self, *args: Any, **kwargs: Any):
-        return self._jit(*args, **kwargs)
+        self.n_calls += 1
+        sig = self._signature(args, kwargs)
+        before = self.n_compiles
+        out = self._jit(*args, **kwargs)
+        if self.n_compiles > before:
+            cause, detail = self._classify(sig)
+            if len(self.retrace_events) < _MAX_EVENTS:
+                self.retrace_events.append({
+                    "program": self.name, "call": self.n_calls,
+                    "compile": self.n_compiles, "cause": cause,
+                    "detail": detail})
+            self._seen.append(sig)
+        return out
+
+    # ------------------------------------------------------------ stats
+    def retrace_summary(self) -> Dict[str, Any]:
+        """``{"causes": {cause: count}, "events": [...]}`` for snapshot
+        blocks; causes cover every trace including the first."""
+        causes: Dict[str, int] = {}
+        for ev in self.retrace_events:
+            causes[ev["cause"]] = causes.get(ev["cause"], 0) + 1
+        return {"causes": causes, "events": list(self.retrace_events)}
+
+
+def retrace_report(programs: Dict[str, "CountingJit"]) -> Dict[str, Any]:
+    """Merge per-program retrace summaries for an engine snapshot:
+    ``{"causes": {...aggregated...}, "by_program": {name: causes}}``."""
+    agg: Dict[str, int] = {}
+    by_prog: Dict[str, Dict[str, int]] = {}
+    for label, cj in programs.items():
+        summ = cj.retrace_summary()
+        by_prog[label] = summ["causes"]
+        for cause, n in summ["causes"].items():
+            agg[cause] = agg.get(cause, 0) + n
+    return {"causes": agg, "by_program": by_prog}
+
+
+def merge_retrace_reports(*reports: Dict[str, Any]) -> Dict[str, Any]:
+    """Combine :func:`retrace_report` outputs from several planes (e.g.
+    the eval engine + the fleet engine) into one, summing cause counts.
+    Program labels are assumed distinct across planes."""
+    agg: Dict[str, int] = {}
+    by_prog: Dict[str, Dict[str, int]] = {}
+    for rep in reports:
+        for cause, n in rep["causes"].items():
+            agg[cause] = agg.get(cause, 0) + n
+        by_prog.update(rep["by_program"])
+    return {"causes": agg, "by_program": by_prog}

@@ -40,7 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.lbfgsb import LbfgsbOptions, LbfgsbResult, lbfgsb_minimize
-from repro.engine.cache import CountingJit
+from repro.engine.cache import CountingJit, retrace_report
 from repro.engine.plan import EvalPlan
 
 Array = jax.Array
@@ -70,6 +70,8 @@ class EngineStats:
             "n_padded": self.n_padded,
             "n_refit_fallbacks": self.n_refit_fallbacks,
             "bucket_rounds": dict(self.bucket_rounds),
+            "retraces": retrace_report({"eval": engine._eval_jit,
+                                        "lockstep": engine._vec_jit}),
         }
 
 

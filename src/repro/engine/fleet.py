@@ -71,7 +71,7 @@ from repro.core.lbfgsb import LbfgsbOptions, lbfgsb_minimize
 from repro.distributed.sharding import fleet_pspec, fleet_sharding
 from repro.engine.ask import (_MSO_DEFAULT, SuggestInfo, incr_core,
                               refit_core, restart_points)
-from repro.engine.cache import CountingJit
+from repro.engine.cache import CountingJit, retrace_report
 from repro.engine.engine import EvalEngine
 from repro.engine.plan import EvalPlan
 from repro.gp.fit import (FIT_OPTS, _FAR, pad_bucket_for, standardize_masked,
@@ -406,11 +406,11 @@ class FleetEngine:
         if blk is None:
             return
         if pad_bucket_for(st.n, self.cfg.pad_bucket) > blk.bucket:
-            # bucket migration: evict now, re-admit (compacted into a
-            # larger block) at the next trial boundary
-            self._evict(st)
+            # bucket migration: journal, then evict and re-admit
+            # (compacted into a larger block) at the next trial boundary
             self.n_migrations += 1
             self._journal({"op": "migrate", "sid": sid, "n": st.n})
+            self._evict(st)
         else:
             i = st.n - 1
             blk.x = blk._pin(blk.x.at[st.slot, i].set(
@@ -548,6 +548,9 @@ class FleetEngine:
             "n_incr_compiles": self._incr_jit.n_compiles,
             "n_mso_compiles": self._mso_jit.n_compiles,
             "n_fleet_compiles": n_compiles,
+            "retraces": retrace_report({"full": self._full_jit,
+                                        "incr": self._incr_jit,
+                                        "mso": self._mso_jit}),
         }
 
     # ------------------------------------------------------- scheduler
@@ -620,10 +623,10 @@ class FleetEngine:
         """Load-shed a queued study (never one holding a slot): it stops
         being schedulable; the owning sampler degrades to the solo path
         when it sees the state (``study_state``)."""
-        st.shed = reason
-        st.pending = None
         self.n_shed += 1
         self._journal({"op": "shed", "sid": st.sid, "reason": reason})
+        st.shed = reason
+        st.pending = None
 
     def shed_study(self, sid: Hashable, reason: str) -> None:
         """Mark a registered study as load-shed (journal-replay path:
@@ -651,10 +654,10 @@ class FleetEngine:
         if st.theta_host is not None:
             blk.theta = blk._pin(blk.theta.at[slot].set(
                 jnp.asarray(st.theta_host, blk.theta.dtype)))
-        blk.studies[slot] = st
-        st.block, st.slot = blk, slot
         self._journal({"op": "admit", "sid": st.sid,
                        "bucket": blk.bucket, "slot": slot, "n": n})
+        blk.studies[slot] = st
+        st.block, st.slot = blk, slot
         if st.from_device is not None:       # bucket-growth re-admission
             if self._slot_device(slot) == st.from_device:
                 self.n_migrations_intra += 1
@@ -695,13 +698,13 @@ class FleetEngine:
         """Retire a study the fleet cannot serve (quarantine retries
         exhausted, or too few clean observations left): free its slot and
         fail the pending request through the result mailbox."""
+        self.n_parked += 1
+        self._journal({"op": "park", "sid": st.sid, "reason": reason})
         if st.block is not None:
             self._clear_slot(st)
         st.parked = reason
         st.pending = None
         st.result = FleetStudyError(f"study {st.sid!r} parked: {reason}")
-        self.n_parked += 1
-        self._journal({"op": "park", "sid": st.sid, "reason": reason})
 
     def _quarantine_newest(self, st: _Study, reason: str) -> None:
         """Drop the study's newest observation from GP data with a
@@ -709,8 +712,13 @@ class FleetEngine:
         benign idle value; park the study if too few clean observations
         remain."""
         k = st.n - 1
-        x_bad, y_bad = st.xs.pop(), st.ys.pop()
-        tag = st.tags.pop()
+        x_bad, y_bad, tag = st.xs[-1], st.ys[-1], st.tags[-1]
+        self.n_quarantined += 1
+        self._journal({"op": "quarantine", "sid": st.sid, "trial": tag,
+                       "x": x_bad.tolist(), "y": y_bad, "reason": reason})
+        st.xs.pop()
+        st.ys.pop()
+        st.tags.pop()
         blk, s = st.block, st.slot
         if blk is not None:
             dt = blk.x.dtype
@@ -719,9 +727,6 @@ class FleetEngine:
             blk.y = blk._pin(blk.y.at[s, k].set(jnp.asarray(0.0, dt)))
         st.n_fit = min(st.n_fit, st.n)
         st.has_factor = False        # the factor summed the dropped row
-        self.n_quarantined += 1
-        self._journal({"op": "quarantine", "sid": st.sid, "trial": tag,
-                       "x": x_bad.tolist(), "y": y_bad, "reason": reason})
         if self.on_quarantine is not None:
             self.on_quarantine(st.sid, tag, reason)
         if st.n < 2 and st.block is not None:

@@ -633,11 +633,12 @@ class BOService:
                     self.backoff_cap)
         delay *= 1.0 + self.backoff_jitter * float(
             self._backoff_rng.random())
-        req.not_before = self._now() + delay
-        req.state = "delayed"
+        not_before = self._now() + delay
         self._journal({"op": "svc_retry", "req": req.rid,
                        "attempt": req.attempts, "delay_s": delay,
-                       "not_before": req.not_before, "error": str(err)})
+                       "not_before": not_before, "error": str(err)})
+        req.not_before = not_before
+        req.state = "delayed"
         self._delayed.append(req)
         t.n_retries += 1
         self.n_retries += 1

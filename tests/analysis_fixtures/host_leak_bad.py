@@ -1,0 +1,34 @@
+"""Fixture: host syncs, data-dependent Python control flow, and host
+robustness state inside the traced closure — must trip
+``host-leak-into-trace``."""
+import jax
+import numpy as np
+
+
+@jax.jit
+def branch_on_traced(x, y):
+    # BAD: Python `if` on a traced value — concretization error at best
+    if x > 0:
+        return y
+    return -y
+
+
+@jax.jit
+def sync_item(x):
+    # BAD: .item() forces a device->host sync per call
+    return x.item()
+
+
+@jax.jit
+def host_roundtrip(x):
+    # BAD: float()/np.asarray pull the traced value to host
+    s = float(x)
+    return np.asarray(x) * s
+
+
+@jax.jit
+def reads_fault_plane(engine, x):
+    # BAD: the fault/recovery plane must never leak into compiled code
+    if engine.fault_injector is not None:
+        return x
+    return x + 1.0

@@ -1,0 +1,34 @@
+"""Fixture: trace-disciplined twin of ``host_leak_bad`` — shape/config
+branches, lax control flow, device-side reductions.  Zero
+``host-leak-into-trace`` findings."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def branch_on_shape(x, y):
+    # shape/ndim branches are static facts, resolved at trace time
+    if x.ndim == 2:
+        return y
+    return -y
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def branch_on_static(x, mode):
+    if mode == "sum":
+        return jnp.sum(x)
+    return jnp.max(x)
+
+
+@jax.jit
+def data_dependent_on_device(x, y):
+    return jnp.where(x > 0, y, -y)
+
+
+@jax.jit
+def optional_arg(x, scale=None):
+    if scale is None:
+        return x
+    return x * scale

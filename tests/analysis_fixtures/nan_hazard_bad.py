@@ -1,0 +1,21 @@
+"""Fixture: non-finite literals and unmasked division inside a
+``while_loop`` carry — must trip ``nan-hazard``."""
+import jax.numpy as jnp
+from jax import lax
+
+
+def normalize_loop(x):
+    def cond(carry):
+        i, v = carry
+        return i < 8
+
+    def body(carry):
+        i, v = carry
+        # BAD: unguarded division — a zero-sum (idle/padded) row turns
+        # the whole carry into NaN
+        scaled = v / v.sum()
+        # BAD: raw inf written into the carry, no mask in sight
+        ceiling = jnp.full_like(v, jnp.inf)
+        return i + 1, jnp.minimum(scaled, ceiling)
+
+    return lax.while_loop(cond, body, (0, x))

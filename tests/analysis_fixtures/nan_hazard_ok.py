@@ -1,0 +1,20 @@
+"""Fixture: masked twin of ``nan_hazard_bad`` — guarded denominators,
+non-finite literals only behind masking ops.  Zero ``nan-hazard``
+findings."""
+import jax.numpy as jnp
+from jax import lax
+
+
+def normalize_loop(x):
+    def cond(carry):
+        i, v = carry
+        return i < 8
+
+    def body(carry):
+        i, v = carry
+        denom = jnp.maximum(v.sum(), 1e-12)
+        scaled = v / denom
+        masked = jnp.where(jnp.isfinite(scaled), scaled, 0.0)
+        return i + 1, masked
+
+    return lax.while_loop(cond, body, (0, x))

@@ -1,0 +1,25 @@
+"""Fixture: jit cache keys derived from live scheduler state — every
+pattern here must trip ``recompile-hazard``."""
+from repro.engine.cache import CountingJit
+
+
+def _bad_step(engine, X):
+    # closure-captured live state: the queue length is baked into the
+    # compiled program as a constant
+    return X[: len(engine._queue)]
+
+
+class Scheduler:
+    def __init__(self):
+        self._studies = {}
+        self._ask_jit = CountingJit(_bad_step)
+
+    def ask(self, X):
+        # BAD: live-study count as an argument to a jit program — every
+        # admit/evict mints a fresh executable
+        return self._ask_jit(len(self._studies), X)
+
+    def rebuild_per_call(self, fn, X):
+        # BAD (warning): per-call wrapper construction defeats the cache
+        prog = CountingJit(fn)
+        return prog(X)

@@ -1,0 +1,18 @@
+"""Fixture: compile-economy-disciplined twin of ``recompile_hazard_bad``
+— programs built once, keyed only on padded shape buckets.  Zero
+``recompile-hazard`` findings."""
+from repro.engine.cache import CountingJit
+
+
+def _step(state, X):
+    return X * 2.0
+
+
+class Scheduler:
+    def __init__(self, slots):
+        self.slots = slots
+        self._ask_jit = CountingJit(_step, static_argnums=())
+
+    def ask(self, state, X_padded):
+        # cache key is the padded bucket shape, never occupancy
+        return self._ask_jit(state, X_padded)

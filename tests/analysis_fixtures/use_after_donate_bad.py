@@ -1,0 +1,19 @@
+"""Fixture: a donated buffer read after the donating call without a
+rebind — must trip ``use-after-donate``."""
+from repro.engine.cache import CountingJit
+
+
+def _refit(gp_state, X):
+    return gp_state
+
+
+class Owner:
+    def __init__(self):
+        self._refit_jit = CountingJit(_refit, donate_argnums=(0,))
+
+    def step(self, gp_state, X):
+        out = self._refit_jit(gp_state, X)
+        # BAD: gp_state's buffer was donated to the call above; XLA may
+        # already have reused it.
+        stale = gp_state
+        return out, stale

@@ -1,0 +1,21 @@
+"""Fixture: donation used correctly — the donated name is rebound to
+the call's result before any later read.  Zero ``use-after-donate``
+findings."""
+from repro.engine.cache import CountingJit
+
+
+def _refit(gp_state, X):
+    return gp_state
+
+
+class Owner:
+    def __init__(self):
+        self._refit_jit = CountingJit(_refit, donate_argnums=(0,))
+
+    def step(self, gp_state, X):
+        gp_state = self._refit_jit(gp_state, X)
+        return gp_state
+
+    def step_fresh_name(self, gp_state, X):
+        new_state = self._refit_jit(gp_state, X)
+        return new_state

@@ -1,0 +1,32 @@
+"""Fixture: journaled state mutated BEFORE the journal append.
+
+Every function here must trip ``wal-before-state``.  Parsed by the
+linter, never imported.
+"""
+
+
+class Engine:
+    def __init__(self):
+        self.journal = None
+        self.studies = {}
+        self.queue = []
+
+    def _journal(self, kind, **fields):
+        if self.journal is not None:
+            self.journal.append(kind, **fields)
+
+    def evict_then_journal(self, st):
+        # BAD: destructive pop happens before the WAL record exists —
+        # a crash between the two lines loses the study silently.
+        self.studies.pop(st.sid)
+        self._journal("evict", study=st.sid)
+
+    def flag_then_journal(self, st, reason):
+        # BAD: scalar lifecycle attr mutated pre-append.
+        st.shed = reason
+        self._journal("shed", study=st.sid, reason=reason)
+
+    def install_then_journal(self, st, slot):
+        # BAD: slot table grows before the admit record.
+        self.studies[slot] = st
+        self._journal("admit", study=st.sid, slot=slot)

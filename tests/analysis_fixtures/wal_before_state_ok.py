@@ -1,0 +1,30 @@
+"""Fixture: WAL-disciplined twins of ``wal_before_state_bad`` — the
+journal append dominates every state change.  Must produce zero
+``wal-before-state`` findings."""
+
+
+class Engine:
+    def __init__(self):
+        self.journal = None
+        self.studies = {}
+        self.queue = []
+
+    def _journal(self, kind, **fields):
+        if self.journal is not None:
+            self.journal.append(kind, **fields)
+
+    def journal_then_evict(self, st):
+        self._journal("evict", study=st.sid)
+        self.studies.pop(st.sid)
+
+    def journal_then_flag(self, st, reason):
+        self._journal("shed", study=st.sid, reason=reason)
+        st.shed = reason
+
+    def journal_in_both_branches(self, st, slot, ok):
+        if ok:
+            self._journal("admit", study=st.sid, slot=slot)
+        else:
+            self._journal("reject", study=st.sid)
+            return
+        self.studies[slot] = st

@@ -1,0 +1,404 @@
+"""Tests for the invariant linter (``repro.analysis``): fixture
+coverage per rule, baseline/suppression semantics, CLI exit codes, the
+CountingJit retrace sanitizer, the opt-in fleet NaN guard, and
+regression tests for the WAL-ordering violations the linter caught in
+the fleet engine and the service."""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import ALL_RULES, RULE_IDS
+from repro.analysis.baseline import Baseline
+from repro.analysis.core import load_project
+from repro.analysis.report import Report, run_rules
+from repro.analysis.runtime import (FiniteGuard, NonFiniteError,
+                                    install_nan_guard, nan_guard_stats)
+from repro.bo.sampler import FleetSampler
+from repro.bo.space import BoxSpace
+from repro.core.mso import MsoOptions
+from repro.engine.cache import (CountingJit, merge_retrace_reports,
+                                retrace_report)
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURES = Path(__file__).parent / "analysis_fixtures"
+
+# rule id -> fixture stem; <stem>_bad.py must trigger the rule,
+# <stem>_ok.py must be finding-free
+RULE_FIXTURES = {
+    "wal-before-state": "wal_before_state",
+    "use-after-donate": "use_after_donate",
+    "recompile-hazard": "recompile_hazard",
+    "host-leak-into-trace": "host_leak",
+    "nan-hazard": "nan_hazard",
+}
+
+
+def _lint(*paths):
+    proj = load_project(list(paths), root=REPO, exclude=())
+    return run_rules(proj, ALL_RULES)
+
+
+# ========================================================== fixtures
+@pytest.mark.parametrize("rule", sorted(RULE_FIXTURES))
+def test_bad_fixture_triggers_exactly_its_rule(rule):
+    findings = _lint(FIXTURES / f"{RULE_FIXTURES[rule]}_bad.py")
+    assert findings, f"{rule}: bad fixture produced no findings"
+    assert {f.rule for f in findings} == {rule}, \
+        f"{rule}: cross-rule contamination: {[f.rule for f in findings]}"
+    for f in findings:
+        assert f.line > 0 and f.file.endswith("_bad.py") and f.message
+
+
+@pytest.mark.parametrize("rule", sorted(RULE_FIXTURES))
+def test_ok_fixture_is_clean(rule):
+    findings = _lint(FIXTURES / f"{RULE_FIXTURES[rule]}_ok.py")
+    assert findings == [], \
+        f"{rule}: ok fixture flagged: {[(f.rule, f.line) for f in findings]}"
+
+
+def test_every_rule_id_has_fixtures():
+    """Meta-test: a new rule without trigger/non-trigger fixtures is a
+    test failure, not a silent coverage gap."""
+    assert set(RULE_FIXTURES) == set(RULE_IDS)
+    for rule, stem in RULE_FIXTURES.items():
+        for suffix in ("bad", "ok"):
+            assert (FIXTURES / f"{stem}_{suffix}.py").exists(), \
+                f"rule {rule} is missing its {suffix} fixture"
+
+
+def test_wal_fixture_finds_all_three_patterns():
+    """evict-before-journal, scalar-flag-before-journal, and
+    slot-table-growth-before-journal are each caught."""
+    findings = _lint(FIXTURES / "wal_before_state_bad.py")
+    assert len(findings) == 3
+    assert {f.func.rsplit(".", 1)[-1] for f in findings} == {
+        "evict_then_journal", "flag_then_journal", "install_then_journal"}
+
+
+def test_recompile_fixture_severities():
+    """Live-state keying is an error; per-call construction a warning."""
+    findings = _lint(FIXTURES / "recompile_hazard_bad.py")
+    sev = {f.func.rsplit(".", 1)[-1]: f.severity for f in findings}
+    assert sev["ask"] == "error"
+    assert sev["rebuild_per_call"] == "warning"
+
+
+# ============================================ baseline / suppression
+def _one_bad_finding():
+    return _lint(FIXTURES / "use_after_donate_bad.py")[0]
+
+
+def test_baseline_suppresses_with_reason():
+    f = _one_bad_finding()
+    bl = Baseline(entries=[
+        Baseline.entry_for(f, "fixture: intentionally bad")])
+    proj = load_project([FIXTURES / "use_after_donate_bad.py"],
+                        root=REPO, exclude=())
+    rep = Report(proj, [f], bl)
+    assert not rep.open and len(rep.baselined) == 1 and not rep.failed
+    assert rep.baselined[0]["reason"] == "fixture: intentionally bad"
+
+
+def test_baseline_without_reason_fails():
+    f = _one_bad_finding()
+    bl = Baseline(entries=[Baseline.entry_for(f, "")])
+    proj = load_project([FIXTURES / "use_after_donate_bad.py"],
+                        root=REPO, exclude=())
+    rep = Report(proj, [f], bl)
+    assert rep.failed
+    assert any(g.rule == "baseline-missing-reason" for g in rep.open)
+
+
+def test_stale_baseline_entries_surface(tmp_path):
+    """An entry whose source line changed/disappeared no longer matches
+    any finding and is reported for pruning."""
+    bl = Baseline(entries=[
+        {"rule": "wal-before-state", "file": "gone.py", "func": "X.y",
+         "snippet": "self.q.pop()", "reason": "was real once"}])
+    proj = load_project([FIXTURES / "wal_before_state_ok.py"],
+                        root=REPO, exclude=())
+    rep = Report(proj, [], bl)
+    assert len(rep.stale_baseline) == 1
+    assert rep.stale_baseline[0]["file"] == "gone.py"
+
+
+def test_inline_allow_requires_reason(tmp_path):
+    src = (FIXTURES / "wal_before_state_bad.py").read_text()
+    with_reason = src.replace(
+        "self.studies.pop(st.sid)",
+        "self.studies.pop(st.sid)  "
+        "# repro: allow[wal-before-state] fixture test")
+    p = tmp_path / "allowed.py"
+    p.write_text(with_reason)
+    proj = load_project([p], root=REPO, exclude=())
+    rep = Report(proj, run_rules(proj, ALL_RULES),
+                 Baseline(path=tmp_path / "b.json"))
+    assert len(rep.suppressed) == 1       # the allowed line
+    assert len(rep.open) == 2             # the other two violations
+    assert rep.suppressed[0]["reason"] == "fixture test"
+    # a bare allow comment with no reason does NOT suppress
+    no_reason = src.replace(
+        "self.studies.pop(st.sid)",
+        "self.studies.pop(st.sid)  # repro: allow[wal-before-state]")
+    p2 = tmp_path / "bare.py"
+    p2.write_text(no_reason)
+    proj2 = load_project([p2], root=REPO, exclude=())
+    rep2 = Report(proj2, run_rules(proj2, ALL_RULES),
+                  Baseline(path=tmp_path / "b2.json"))
+    assert len(rep2.open) == 3 and rep2.failed
+
+
+# ================================================================ CLI
+def _run_cli(*argv):
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *argv],
+        capture_output=True, text=True, cwd=REPO,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"})
+
+
+def test_cli_clean_on_tree():
+    """The shipped tree has no open findings: every real violation is
+    fixed, every false positive baselined with a reason."""
+    res = _run_cli("--check")
+    assert res.returncode == 0, res.stdout + res.stderr
+
+
+def test_cli_nonzero_on_seeded_violations(tmp_path):
+    out = tmp_path / "report.json"
+    res = _run_cli("tests/analysis_fixtures", "--no-baseline",
+                   "--check", "--json", str(out))
+    assert res.returncode == 1, res.stdout + res.stderr
+    rep = json.loads(out.read_text())
+    got = {f["rule"] for f in rep["open"]}
+    assert got == set(RULE_IDS), \
+        f"every rule must fire on its fixture; missing {set(RULE_IDS) - got}"
+    for f in rep["open"]:
+        assert f["file"] and f["line"] and f["severity"] and f["message"]
+
+
+# ================================================= retrace sanitizer
+def test_retrace_cause_static_arg():
+    """A mis-keyed program (python value marked static) reports
+    `static-arg` as the retrace cause — the exact diagnosis the
+    compile-economy assertions need when they trip."""
+    prog = CountingJit(lambda a, b: a * b, static_argnums=(1,),
+                       name="miskeyed")
+    x = jnp.ones((3,))
+    prog(x, 2.0)
+    prog(x, 3.0)                         # same shapes; new static value
+    summ = prog.retrace_summary()
+    assert summ["causes"] == {"first-trace": 1, "static-arg": 1}
+    ev = summ["events"][-1]
+    assert ev["cause"] == "static-arg" and ev["program"] == "miskeyed"
+
+
+def test_retrace_cause_shape_and_dtype():
+    prog = CountingJit(lambda a: a * 2)
+    prog(jnp.ones((3,)))
+    prog(jnp.ones((5,)))
+    prog(jnp.ones((5,), dtype=jnp.int32))
+    causes = prog.retrace_summary()["causes"]
+    assert causes["first-trace"] == 1 and causes["shape"] == 1 \
+        and causes["dtype"] == 1
+
+
+def test_retrace_cache_hit_records_nothing():
+    prog = CountingJit(lambda a: a + 1)
+    for _ in range(4):
+        prog(jnp.ones((2,)))
+    assert prog.n_compiles == 1
+    assert prog.retrace_summary()["causes"] == {"first-trace": 1}
+
+
+def test_retrace_report_and_merge():
+    a = CountingJit(lambda x: x)
+    b = CountingJit(lambda x: x * 2)
+    a(jnp.ones((2,)))
+    b(jnp.ones((2,)))
+    b(jnp.ones((4,)))
+    rep = retrace_report({"a": a, "b": b})
+    assert rep["causes"] == {"first-trace": 2, "shape": 1}
+    assert rep["by_program"]["b"]["shape"] == 1
+    merged = merge_retrace_reports(rep, {"causes": {"shape": 2},
+                                         "by_program": {"c": {"shape": 2}}})
+    assert merged["causes"]["shape"] == 3 and "c" in merged["by_program"]
+
+
+# ======================================================== NaN guard
+class _EngineStub:
+    def __init__(self):
+        self._full_jit = CountingJit(lambda x: x * 2, name="full")
+        self._incr_jit = CountingJit(lambda x: x + 1, name="incr")
+        self._mso_jit = CountingJit(lambda x: x - 1, name="mso")
+
+
+def test_nan_guard_passes_finite_and_keeps_attrs():
+    eng = _EngineStub()
+    install_nan_guard(eng)
+    out = eng._full_jit(jnp.ones((3,)))
+    np.testing.assert_array_equal(np.asarray(out), 2.0 * np.ones(3))
+    # CountingJit surface still reachable through the guard
+    assert eng._full_jit.n_compiles == 1
+    stats = nan_guard_stats(eng)
+    assert stats["installed"] and stats["n_guard_checks"] == 1
+
+
+def test_nan_guard_raises_naming_program_and_leaf():
+    eng = _EngineStub()
+    install_nan_guard(eng)
+    bad = jnp.array([1.0, jnp.nan, 3.0])
+    with pytest.raises(NonFiniteError, match="full"):
+        eng._full_jit(bad)
+    with pytest.raises(NonFiniteError, match="inputs"):
+        eng._mso_jit(bad)
+
+
+def test_nan_guard_catches_nonfinite_outputs():
+    eng = _EngineStub()
+    eng._incr_jit = CountingJit(lambda x: x / 0.0, name="incr")
+    install_nan_guard(eng)
+    with pytest.raises(NonFiniteError, match="outputs"):
+        eng._incr_jit(jnp.ones((2,)))
+
+
+def test_nan_guard_idempotent():
+    eng = _EngineStub()
+    g1 = list(install_nan_guard(eng))
+    g2 = list(install_nan_guard(eng))
+    assert [id(a) for a in g1] == [id(b) for b in g2]
+    assert isinstance(eng._full_jit, FiniteGuard) \
+        and not isinstance(eng._full_jit._inner, FiniteGuard)
+
+
+# ==================================== WAL ordering regression tests
+#
+# PR 9's linter found five real write-ahead violations in the fleet
+# engine (_shed, _install, _park, _quarantine_newest, observe's
+# migration) and one in the service (_retry): state was mutated before
+# the journal append, so a crash inside the append lost the mutation
+# silently.  Each test injects a journal whose append always fails and
+# asserts the state transition did NOT happen.
+
+class _ExplodingJournal:
+    def append(self, record):
+        raise RuntimeError("journal I/O failed")
+
+
+def _small_fleet(rounds=4):
+    sp = BoxSpace.cube(2, 0.0, 1.0)
+    fs = FleetSampler([sp] * 2, seed=0, n_startup_trials=3, n_restarts=2,
+                      pad_multiple=4, slots=2, posterior_backend="xla",
+                      refit_interval=2, warm_start=False,
+                      mso_options=MsoOptions(maxiter=10, pgtol=1e-1))
+    for _ in range(rounds):
+        for i, t in enumerate(fs.ask_all()):
+            fs.tell(i, t.trial_id, float(np.sum((t.x - 0.3) ** 2)))
+    return fs
+
+
+@pytest.fixture(scope="module")
+def driven_fleet():
+    return _small_fleet()
+
+
+def test_wal_shed_not_applied_on_journal_failure(driven_fleet):
+    fleet = driven_fleet.fleet
+    st = fleet._studies[0]
+    fleet.journal = _ExplodingJournal()
+    try:
+        with pytest.raises(RuntimeError):
+            fleet._shed(st, "torn append")
+        assert st.shed is None, "shed applied before its WAL record"
+    finally:
+        fleet.journal = None
+
+
+def test_wal_park_not_applied_on_journal_failure(driven_fleet):
+    fleet = driven_fleet.fleet
+    st = fleet._studies[0]
+    blk_before, result_before = st.block, st.result
+    fleet.journal = _ExplodingJournal()
+    try:
+        with pytest.raises(RuntimeError):
+            fleet._park(st, "torn append")
+        assert st.parked is None
+        assert st.block is blk_before and st.result is result_before
+    finally:
+        fleet.journal = None
+
+
+def test_wal_quarantine_not_applied_on_journal_failure(driven_fleet):
+    fleet = driven_fleet.fleet
+    st = fleet._studies[1]
+    n_before = (len(st.xs), len(st.ys), len(st.tags))
+    fleet.journal = _ExplodingJournal()
+    try:
+        with pytest.raises(RuntimeError):
+            fleet._quarantine_newest(st, "torn append")
+        assert (len(st.xs), len(st.ys), len(st.tags)) == n_before, \
+            "observation dropped before its quarantine WAL record"
+    finally:
+        fleet.journal = None
+
+
+def test_wal_migration_not_applied_on_journal_failure():
+    fs = _small_fleet(rounds=4)
+    fleet = fs.fleet
+    st = fleet._studies[0]
+    while st.n < 4:                      # fill the pad bucket exactly
+        for i, t in enumerate(fs.ask_all()):
+            fs.tell(i, t.trial_id, float(np.sum((t.x - 0.3) ** 2)))
+    assert st.block is not None and st.n == 4
+    fleet.journal = _ExplodingJournal()
+    try:
+        with pytest.raises(RuntimeError):
+            # 5th observation crosses the pad bucket -> migration path
+            fleet.observe(0, np.full(2, 0.5), 1.0, tag=99)
+        assert st.block is not None, \
+            "slot evicted before the migrate WAL record"
+        assert st not in fleet._queue
+    finally:
+        fleet.journal = None
+
+
+def test_wal_install_not_applied_on_journal_failure(driven_fleet):
+    fleet = driven_fleet.fleet
+    st = fleet._studies[1]
+    blk, slot = st.block, st.slot
+    assert blk is not None
+    fleet._evict(st)                     # not itself a journaled op
+    fleet._queue.remove(st)
+    fleet.journal = _ExplodingJournal()
+    try:
+        with pytest.raises(RuntimeError):
+            fleet._install(st, blk, slot)
+        assert blk.studies[slot] is None and st.block is None, \
+            "slot table updated before the admit WAL record"
+    finally:
+        fleet.journal = None
+        fleet._install(st, blk, slot)    # restore for other tests
+
+
+def test_wal_service_retry_not_applied_on_journal_failure():
+    from repro.serve.bo_service import BOService, TenantConfig
+
+    fs = _small_fleet(rounds=0)
+    svc = BOService(fs, [TenantConfig("a", weight=1.0, studies=(0, 1))],
+                    max_retries=3, backoff_base=0.01, backoff_cap=0.1)
+    req = svc.submit_ask("a", 0)
+    req.attempts = 1                     # first transient failure
+    state_before, delayed_before = req.state, len(svc._delayed)
+    fs.journal = _ExplodingJournal()     # BOService journals via fs
+    try:
+        with pytest.raises(RuntimeError):
+            svc._retry(req, RuntimeError("transient"))
+        assert req.state == state_before and req.not_before is None
+        assert len(svc._delayed) == delayed_before, \
+            "request delayed before its svc_retry WAL record"
+    finally:
+        fs.journal = None
