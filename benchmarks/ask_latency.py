@@ -18,9 +18,17 @@ XLA trace and no bucket migration — for the fused run additionally the
 trials that take the incremental (O(n²)) program, which is the
 steady-state the fused pipeline is designed around.
 
+--trace enables the obs span tracer for the whole run (off by default —
+the obs contract): per-phase breakdowns land in the summary block, the
+full Chrome-trace JSON in --trace-out, and --check-compiles still
+asserts the O(#buckets) compile economy WITH tracing on (instrumentation
+must never add traces).  --debug-nans arms the runtime FiniteGuard on
+the two fused AskEngine programs.
+
 Usage:
   python benchmarks/ask_latency.py [--tiny] [--trials N]
       [--backends xla pallas_interpret ...] [--check-compiles]
+      [--trace] [--trace-out BENCH_ask_trace.json] [--debug-nans]
       [--out BENCH_ask.json]
 """
 import argparse
@@ -34,15 +42,19 @@ jax.config.update("jax_enable_x64", True)
 
 import numpy as np                                     # noqa: E402
 
+from repro.analysis.runtime import install_nan_guard, nan_guard_stats  # noqa: E402
 from repro.bo.objectives import make_objective         # noqa: E402
 from repro.bo.sampler import GPSampler                 # noqa: E402
 from repro.bo.space import BoxSpace                    # noqa: E402
 from repro.core.mso import MsoOptions                  # noqa: E402
 from repro.gp.fit import pad_bucket_for                # noqa: E402
+from repro.obs import export as obs_export             # noqa: E402
+from repro.obs import trace as obs_trace               # noqa: E402
 
 
 def run_bo(*, fused: bool, backend: str, trials: int, D: int, B: int,
-           pad: int, refit_interval: int, n_startup: int, seed: int = 0):
+           pad: int, refit_interval: int, n_startup: int, seed: int = 0,
+           debug_nans: bool = False):
     obj = make_objective("sphere", D, seed=seed)
     space = BoxSpace.cube(D, *obj.bounds)
     s = GPSampler(space, strategy="dbe_vec", seed=seed,
@@ -53,6 +65,8 @@ def run_bo(*, fused: bool, backend: str, trials: int, D: int, B: int,
     ask_ms, kinds, buckets = [], [], []
     prev_bucket = 0
     for i in range(trials):
+        if debug_nans and fused and s._ask is not None:
+            install_nan_guard(s._ask)   # idempotent; engine is lazy-built
         n_done = sum(t.state == "complete" for t in s.trials)
         suggest = n_done >= n_startup
         bucket = pad_bucket_for(n_done, pad) if suggest else 0
@@ -89,7 +103,7 @@ def bench_backend(backend: str, args) -> list:
         s, ask_ms, kinds, buckets = run_bo(
             fused=fused, backend=backend, trials=args.trials, D=args.D,
             B=args.B, pad=args.pad, refit_interval=args.refit_interval,
-            n_startup=args.n_startup)
+            n_startup=args.n_startup, debug_nans=args.debug_nans)
         suggest_ms = [m for m, k in zip(ask_ms, kinds) if k != "startup"]
         sm = [m for m, keep in zip(ask_ms, steady_mask(kinds, fused))
               if keep]
@@ -112,6 +126,8 @@ def bench_backend(backend: str, args) -> list:
                                 ("n_full_refits", "n_incremental",
                                  "n_fallbacks", "n_full_compiles",
                                  "n_incr_compiles", "n_ask_compiles")}
+            if args.debug_nans and s._ask is not None:
+                row["nan_guard"] = nan_guard_stats(s._ask)
         else:
             row["engine_compiles"] = engine.get("n_compiles")
             row["eval_rounds_total"] = engine.get("n_rounds")
@@ -171,6 +187,15 @@ def main(argv=None):
     ap.add_argument("--backends", nargs="+", default=None,
                     choices=("xla", "pallas", "pallas_interpret"))
     ap.add_argument("--check-compiles", action="store_true")
+    ap.add_argument("--trace", action="store_true",
+                    help="enable the obs span tracer (off by default); "
+                    "adds a per-phase breakdown to the summary and "
+                    "writes the Chrome-trace JSON to --trace-out")
+    ap.add_argument("--trace-out", default="BENCH_ask_trace.json")
+    ap.add_argument("--debug-nans", action="store_true",
+                    help="wrap the two fused AskEngine programs in a "
+                    "finite-guard: every float leaf entering/leaving "
+                    "them is checked (one host sync per call)")
     ap.add_argument("--out", default="BENCH_ask.json")
     args = ap.parse_args(argv)
 
@@ -185,6 +210,9 @@ def main(argv=None):
         args.refit_interval, args.n_startup = 8, 10
         args.backends = args.backends or ["xla", "pallas_interpret"]
 
+    if args.trace:
+        obs_trace.enable()
+
     out = []
     for backend in args.backends:
         out.extend(bench_backend(backend, args))
@@ -192,6 +220,13 @@ def main(argv=None):
     # headline scalars, one per configuration (the speed rows carry no
     # "fused" key; per-run rows do)
     summary = {}
+    if args.trace:
+        events = obs_trace.get().events()
+        summary["phase_breakdown"] = obs_export.phase_breakdown(events)
+        obs_export.write_chrome_trace(
+            args.trace_out, events, process_name="ask_latency",
+            meta={"bench": "ask_latency"})
+        print(f"wrote {args.trace_out} ({len(events)} trace events)")
     for r in out:
         if "fused" in r:
             tag = f"{r['backend']}_{'fused' if r['fused'] else 'unfused'}"

@@ -38,9 +38,16 @@ two BENCH files diff against each other.
 Emits BENCH_serve.json (append-only row array + a ``summary`` dict of
 headline scalars, same contract as the other BENCH files).
 
+--trace enables the obs span tracer for the whole run (off by default):
+DRR-round/dispatch spans and QoS instants (sheds, rung changes,
+degrades) land in --trace-out as Chrome-trace JSON, and the summary
+gains a per-phase breakdown.  --check-compiles still holds WITH tracing
+on — instrumentation must never add programs.
+
 Usage:
   python benchmarks/bo_serve.py [--tiny] [--requests N] [--seed K]
-      [--chaos] [--check-compiles] [--out BENCH_serve.json]
+      [--chaos] [--check-compiles] [--trace]
+      [--trace-out BENCH_serve_trace.json] [--out BENCH_serve.json]
 """
 import argparse
 import json
@@ -64,6 +71,8 @@ from repro.bo.sampler import FleetSampler              # noqa: E402
 from repro.bo.space import BoxSpace                    # noqa: E402
 from repro.core.mso import MsoOptions                  # noqa: E402
 from repro.engine import FleetFullError                # noqa: E402
+from repro.obs import export as obs_export             # noqa: E402
+from repro.obs import trace as obs_trace               # noqa: E402
 from repro.serve.bo_service import (BOService,         # noqa: E402
                                     TenantConfig)
 
@@ -363,6 +372,11 @@ def main(argv=None):
                     help="add a journaled kill-and-recover row with "
                     "latency injection")
     ap.add_argument("--check-compiles", action="store_true")
+    ap.add_argument("--trace", action="store_true",
+                    help="enable the obs span tracer (off by default); "
+                    "adds a per-phase breakdown to the summary and "
+                    "writes the Chrome-trace JSON to --trace-out")
+    ap.add_argument("--trace-out", default="BENCH_serve_trace.json")
     ap.add_argument("--debug-nans", action="store_true",
                     help="wrap the three fleet block programs in a "
                     "finite-guard: every float leaf entering/leaving "
@@ -384,6 +398,9 @@ def main(argv=None):
     args.rate_mid, args.rate_burst, args.rate_low = 20.0, 200.0, 4.0
     args.light_deadline = 60.0
 
+    if args.trace:
+        obs_trace.enable()
+
     rows = []
     for mix, specs in _tenant_specs(args).items():
         rows.extend(run_mix(mix, specs, args))
@@ -391,6 +408,13 @@ def main(argv=None):
         rows.extend(run_chaos(args))
 
     summary = {}
+    if args.trace:
+        events = obs_trace.get().events()
+        summary["phase_breakdown"] = obs_export.phase_breakdown(events)
+        obs_export.write_chrome_trace(
+            args.trace_out, events, process_name="bo_serve",
+            meta={"bench": "bo_serve"})
+        print(f"wrote {args.trace_out} ({len(events)} trace events)")
     for r in rows:
         if r["mode"] == "serve_overall":
             m = r["mix"]
@@ -403,8 +427,11 @@ def main(argv=None):
             if "nan_guard" in r:
                 summary[f"{m}_nan_guard_checks"] = \
                     r["nan_guard"]["n_guard_checks"]
-        elif r["mode"] == "serve" and r["mix"] == "skew":
-            summary[f"skew_{r['tenant']}_p99_ms"] = r["p99_ms"]
+        elif r["mode"] == "serve":
+            # per-tenant tails for every mix (the obs snapshot schema
+            # carries the counters; latency quantiles live here)
+            summary[f"{r['mix']}_{r['tenant']}_p50_ms"] = r["p50_ms"]
+            summary[f"{r['mix']}_{r['tenant']}_p99_ms"] = r["p99_ms"]
         elif r["mode"] == "serve_chaos":
             summary["chaos_goodput_sps"] = r["goodput_sps"]
             summary["chaos_goodput_post_recovery_sps"] = \

@@ -73,6 +73,8 @@ import numpy as np                                     # noqa: E402
 
 from repro.analysis.runtime import install_nan_guard, nan_guard_stats  # noqa: E402
 from repro.bo.objectives import make_objective         # noqa: E402
+from repro.obs import export as obs_export             # noqa: E402
+from repro.obs import trace as obs_trace               # noqa: E402
 from repro.bo.sampler import FleetSampler, GPSampler   # noqa: E402
 from repro.bo.space import BoxSpace                    # noqa: E402
 from repro.core.mso import MsoOptions                  # noqa: E402
@@ -444,8 +446,16 @@ def main(argv=None):
                     "finite-guard: every float leaf entering/leaving "
                     "them is checked; raises NonFiniteError naming the "
                     "program and leaf (one host sync per call)")
+    ap.add_argument("--trace", action="store_true",
+                    help="enable the obs span tracer (off by default); "
+                    "adds a per-phase breakdown to the summary and "
+                    "writes the Chrome-trace JSON to --trace-out")
+    ap.add_argument("--trace-out", default="BENCH_fleet_trace.json")
     ap.add_argument("--out", default="BENCH_fleet.json")
     args = ap.parse_args(argv)
+
+    if args.trace:
+        obs_trace.enable()
 
     if args.mesh is not None and args.mesh > len(jax.devices()):
         raise SystemExit(
@@ -483,6 +493,13 @@ def main(argv=None):
     # headline scalars, one per configuration — dashboards and PR diffs
     # read these without walking the row arrays
     summary = {}
+    if args.trace:
+        events = obs_trace.get().events()
+        summary["phase_breakdown"] = obs_export.phase_breakdown(events)
+        obs_export.write_chrome_trace(
+            args.trace_out, events, process_name="fleet_throughput",
+            meta={"bench": "fleet_throughput"})
+        print(f"wrote {args.trace_out} ({len(events)} trace events)")
     for r in out:
         if r.get("summary"):
             summary[f"{r['backend']}_S{r['S']}_speedup_aggregate"] = \

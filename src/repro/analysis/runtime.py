@@ -1,12 +1,19 @@
-"""Runtime sanitizers: the opt-in fleet NaN guard (``--debug-nans``).
+"""Runtime sanitizers: the opt-in NaN guard (``--debug-nans``).
 
 The static ``nan-hazard`` rule proves no *syntactic* path feeds a
 non-finite value into a shared carry; this guard proves the actual
 ``_FAR`` benign-row invariant at runtime — every float leaf entering or
-leaving the three fleet block programs (full refit, incremental refit,
-MSO tail) is finite, idle and quarantined rows included.  It costs one
-host sync per program call, so it is strictly opt-in (chaos benches,
-debugging), never the hot path.
+leaving a guarded program is finite, idle and quarantined rows included.
+It costs one host sync per program call, so it is strictly opt-in (chaos
+benches, debugging), never the hot path.
+
+Guarded planes: the three fleet block programs (full refit, incremental
+refit, MSO tail) and the two solo AskEngine programs (fused full /
+incremental ask) — :func:`install_nan_guard` picks the set from the
+engine's attributes.  A tripped guard reports through the obs plane
+(an ``nan_guard.nonfinite`` instant on the flight-recorder timeline)
+before raising, so a crashed chaos run shows *where* the poison crossed
+a program boundary.
 """
 from __future__ import annotations
 
@@ -14,6 +21,8 @@ from typing import Any, Iterable, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.obs.trace import instant as _obs_instant
 
 
 class NonFiniteError(AssertionError):
@@ -46,8 +55,10 @@ class FiniteGuard:
     def _check(self, tree: Any, direction: str) -> None:
         path, leaf = _first_nonfinite(tree)
         if leaf is not None:
+            _obs_instant("nan_guard.nonfinite", program=self._label,
+                         direction=direction, leaf=path or "<root>")
             raise NonFiniteError(
-                f"non-finite value in {direction} of fleet program "
+                f"non-finite value in {direction} of guarded program "
                 f"'{self._label}' at leaf {path or '<root>'} "
                 f"(shape {getattr(leaf, 'shape', '?')}): the _FAR "
                 f"benign-row invariant is violated — an idle/quarantined "
@@ -65,26 +76,36 @@ class FiniteGuard:
 
 
 _FLEET_PROGRAMS = ("_full_jit", "_incr_jit", "_mso_jit")
+_ASK_PROGRAMS = ("_full_jit", "_incr_jit")
 
 
-def install_nan_guard(fleet_engine) -> Iterable[FiniteGuard]:
-    """Wrap the three fleet block programs in place; returns the guards
+def _program_attrs(engine) -> Tuple[str, ...]:
+    """Which jitted-program attributes an engine exposes: the fleet
+    plane carries a separate MSO tail program, the solo AskEngine fuses
+    it into its two programs."""
+    return _FLEET_PROGRAMS if hasattr(engine, "_mso_jit") \
+        else _ASK_PROGRAMS
+
+
+def install_nan_guard(engine) -> Iterable[FiniteGuard]:
+    """Wrap an engine's jitted programs in place — the three fleet block
+    programs or the two solo AskEngine programs.  Returns the guards
     (idempotent: re-installing over an existing guard is a no-op)."""
     guards = []
-    for attr in _FLEET_PROGRAMS:
-        prog = getattr(fleet_engine, attr)
+    for attr in _program_attrs(engine):
+        prog = getattr(engine, attr)
         if isinstance(prog, FiniteGuard):
             guards.append(prog)
             continue
         g = FiniteGuard(prog, attr.strip("_").replace("_jit", ""))
-        setattr(fleet_engine, attr, g)
+        setattr(engine, attr, g)
         guards.append(g)
     return guards
 
 
-def nan_guard_stats(fleet_engine) -> dict:
+def nan_guard_stats(engine) -> dict:
     """``{"installed": bool, "n_guard_checks": int}`` for summaries."""
-    progs = [getattr(fleet_engine, a, None) for a in _FLEET_PROGRAMS]
+    progs = [getattr(engine, a, None) for a in _program_attrs(engine)]
     installed = all(isinstance(p, FiniteGuard) for p in progs)
     return {"installed": installed,
             "n_guard_checks": sum(p.n_guard_checks for p in progs

@@ -40,6 +40,8 @@ import warnings
 import zlib
 from typing import Any, Dict, List, Optional
 
+from repro.obs.trace import get as _obs_get
+
 JOURNAL_NAME = "journal.log"
 
 
@@ -86,10 +88,18 @@ class StudyJournal:
             self._f.flush()
             os.fsync(self._f.fileno())
             raise InjectedCrash(f"injected crash at journal seq {seq}")
+        tr = _obs_get()
+        t0 = tr.now_us() if tr is not None else 0.0
         self._f.write(data)
         self._f.flush()
         if self.sync:
             os.fsync(self._f.fileno())
+        if tr is not None:
+            # the durability cost of WAL discipline, per record: write +
+            # flush (+ fsync when sync=True) as one timeline span
+            tr.record_span("journal.append", t0, tr.now_us() - t0,
+                           op=record.get("op", "?"), seq=seq,
+                           n_bytes=len(data), fsync=self.sync)
         self.seq = seq + 1
         return seq
 

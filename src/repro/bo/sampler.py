@@ -43,6 +43,7 @@ from repro.engine.cache import merge_retrace_reports
 from repro.gp.fit import (fit_gp, pad_bucket_for, standardize,
                           standardize_masked)
 from repro.gp.gpr import with_kinv
+from repro.obs import trace as obs
 
 
 def _standardize_bucketed(y: np.ndarray, pad: int) -> jax.Array:
@@ -205,19 +206,22 @@ class GPSampler:
         U = self.space.to_unit(X)
         # minimize y == maximize -y (standardized)
         t0 = time.perf_counter()
-        if self.strategy == "dbe_vec":
-            # run the moments through the same padded masked reduction the
-            # fused program uses: reduction shape changes the last-ulp
-            # rounding, and the MAP fit amplifies a 1-ulp y_std difference
-            # into visibly different hyperparameters
-            y_std = _standardize_bucketed(-y, self.pad_multiple)
-        else:
-            y_std, _, _ = standardize(jnp.asarray(-y))
-        gp = fit_gp(jnp.asarray(U), y_std, n_restarts=self.gp_fit_restarts,
-                    seed=self.seed + len(self.trials),
-                    pad_bucket=self.pad_multiple)
-        if self.posterior_backend != "xla":
-            gp = with_kinv(gp)      # fused quadratic-form posterior input
+        with obs.span("ask.phase.standardize", n=len(y)):
+            if self.strategy == "dbe_vec":
+                # run the moments through the same padded masked reduction
+                # the fused program uses: reduction shape changes the
+                # last-ulp rounding, and the MAP fit amplifies a 1-ulp
+                # y_std difference into visibly different hyperparameters
+                y_std = _standardize_bucketed(-y, self.pad_multiple)
+            else:
+                y_std, _, _ = standardize(jnp.asarray(-y))
+        with obs.span("ask.phase.refit", n=len(y)):
+            gp = fit_gp(jnp.asarray(U), y_std,
+                        n_restarts=self.gp_fit_restarts,
+                        seed=self.seed + len(self.trials),
+                        pad_bucket=self.pad_multiple)
+            if self.posterior_backend != "xla":
+                gp = with_kinv(gp)  # fused quadratic-form posterior input
         self.stats.n_gp_fits += 1
         self.stats.fit_time += time.perf_counter() - t0
 
@@ -226,21 +230,24 @@ class GPSampler:
         # restart points: incumbent + (B-1) uniform (GPSampler-style).
         # dbe_vec draws them from the jax PRNG stream so the unfused path
         # stays trajectory-identical to the fused one-program ask()
-        inc = U[int(np.argmin(y))]
-        if self.strategy == "dbe_vec":
-            rand = np.asarray(jax.random.uniform(
-                self._restart_key(), (self.B - 1, self.space.dim),
-                jnp.asarray(U).dtype))
-        else:
-            rand = self.rng.uniform(0.0, 1.0, (self.B - 1, self.space.dim))
-        x0 = np.concatenate([inc[None], rand], 0)
+        with obs.span("ask.phase.restart_sampling", B=self.B):
+            inc = U[int(np.argmin(y))]
+            if self.strategy == "dbe_vec":
+                rand = np.asarray(jax.random.uniform(
+                    self._restart_key(), (self.B - 1, self.space.dim),
+                    jnp.asarray(U).dtype))
+            else:
+                rand = self.rng.uniform(0.0, 1.0,
+                                        (self.B - 1, self.space.dim))
+            x0 = np.concatenate([inc[None], rand], 0)
 
         t0 = time.perf_counter()
-        res = maximize_acqf(self._acq_fn, x0, 0.0, 1.0,
-                            acq_state=(gp, best_val),
-                            strategy=self.strategy,
-                            options=self.mso_options,
-                            engine=self.engine)
+        with obs.span("ask.phase.lockstep", strategy=self.strategy):
+            res = maximize_acqf(self._acq_fn, x0, 0.0, 1.0,
+                                acq_state=(gp, best_val),
+                                strategy=self.strategy,
+                                options=self.mso_options,
+                                engine=self.engine)
         self.stats.acqf_time += time.perf_counter() - t0
         self.stats.acqf_iters.append(float(np.median(res.n_iters)))
         self.stats.acqf_rounds.append(res.n_rounds)
@@ -653,6 +660,8 @@ class FleetSampler:
         exception in that study's position instead of raising, so one
         broken study cannot take down the whole batch."""
         studies = list(studies)
+        tr = obs.get()
+        t0 = tr.now_us() if tr is not None else 0.0
         for i in studies:
             s = self.samplers[i]
             if s._fleet is not None:
@@ -671,6 +680,9 @@ class FleetSampler:
             self._append({"op": "ask", "study": i, "trial": t.trial_id,
                           "x": t.x.tolist(), "startup": startup})
             out.append(t)
+        if tr is not None:
+            tr.record_span("fleet.ask_batch", t0, tr.now_us() - t0,
+                           n=len(studies))
         return out
 
     def cancel_ask(self, study: int) -> bool:
@@ -762,6 +774,7 @@ class FleetSampler:
                     flat[f"s{i}/theta"] = th
         self.ckpt.save_flat(step, flat)
         self._append({"op": "snapshot", "step": step})
+        obs.instant("fleet.checkpoint", step=step)
         return step
 
     def install_drain_handler(self):
@@ -778,14 +791,15 @@ class FleetSampler:
         study state, journal a drain record, close the journal.  After
         ``drain()`` the journal directory is a complete, recoverable
         image of the fleet."""
-        served = self.fleet.step()
-        step = None
-        if self.ckpt is not None:
-            step = self.checkpoint()
-        if self.journal is not None:
-            self._append({"op": "drain", "served": served,
-                          "snapshot": step})
-            self.journal.close()
+        with obs.span("fleet.drain"):
+            served = self.fleet.step()
+            step = None
+            if self.ckpt is not None:
+                step = self.checkpoint()
+            if self.journal is not None:
+                self._append({"op": "drain", "served": served,
+                              "snapshot": step})
+                self.journal.close()
         return {"served": served, "snapshot_step": step}
 
     @classmethod
@@ -805,6 +819,8 @@ class FleetSampler:
         stay pending and are listed in the report for the driver to
         re-evaluate."""
         t0 = time.perf_counter()
+        tr_obs = obs.get()
+        t_obs = tr_obs.now_us() if tr_obs is not None else 0.0
         journal = StudyJournal(journal_dir, fault_injector=fault_injector)
         records = journal.replay()
         if not records or records[0].get("op") != "config":
@@ -894,6 +910,11 @@ class FleetSampler:
             n_replayed=n_replayed,
             truncated_bytes=journal.truncated_bytes, pending=pending,
             replay_ms=1e3 * (time.perf_counter() - t0))
+        if tr_obs is not None:
+            tr_obs.record_span("fleet.recover", t_obs,
+                               tr_obs.now_us() - t_obs,
+                               n_records=len(records),
+                               n_replayed=n_replayed)
         return fs, report
 
     def stats_snapshot(self) -> dict:

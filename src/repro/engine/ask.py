@@ -34,6 +34,7 @@ from jax.scipy.linalg import cho_solve
 
 from repro.core.lbfgsb import LbfgsbOptions, lbfgsb_minimize
 from repro.engine.cache import CountingJit, retrace_report
+from repro.obs import trace as obs
 from repro.engine.engine import EvalEngine
 from repro.engine.plan import EvalPlan
 from repro.gp.fit import (FIT_OPTS, _FAR, fit_padded_core,
@@ -156,6 +157,13 @@ class AskEngine:
         # donate the O(n²) factor buffers: steady-state trials rewrite
         # them in place instead of allocating fresh ones
         self._incr_jit = CountingJit(self._incr_impl, donate_argnums=(5, 6))
+        # device-completion timing (block-until-ready spans when the obs
+        # tracer is enabled; passthrough otherwise) — wraps the programs
+        # AFTER construction so the CountingJit call sites stay intact
+        self._full_jit = obs.ProgramTimer(self._full_jit,
+                                          "ask.program.full")
+        self._incr_jit = obs.ProgramTimer(self._incr_jit,
+                                          "ask.program.incr")
 
         # trial-to-trial device state
         self._x: Optional[Array] = None       # (b, D) padded observations
@@ -217,6 +225,8 @@ class AskEngine:
         if self._n < 2:
             raise ValueError(
                 f"suggest() needs >= 2 observations, have {self._n}")
+        tr = obs.get()
+        t_start = tr.now_us() if tr is not None else 0.0
         n_valid = jnp.asarray(self._n, jnp.int32)
 
         # refit_interval=k ⇒ a full MAP refit every k-th suggest
@@ -248,9 +258,11 @@ class AskEngine:
             init = None
             if self.cfg.warm_start and self._theta is not None:
                 init = unpack_theta(self._theta, self.cfg.dim)
-            thetas = theta_init_grid(self.cfg.dim, dt,
-                                     self.cfg.gp_fit_restarts, fit_seed,
-                                     init=init)
+            with obs.span("ask.phase.theta_grid",
+                          restarts=self.cfg.gp_fit_restarts):
+                thetas = theta_init_grid(self.cfg.dim, dt,
+                                         self.cfg.gp_fit_restarts,
+                                         fit_seed, init=init)
             tlo, tup = theta_bounds(self.cfg.dim, dt)
             best_x, theta, chol, alpha, kinv, stats = self._full_jit(
                 key, self._x, self._y, n_valid, thetas,
@@ -269,6 +281,10 @@ class AskEngine:
         # the shared EngineStats economy counters here
         self.engine.record_lockstep_economy(self.cfg.n_restarts,
                                             info.rounds, info.n_evals)
+        if tr is not None:
+            tr.record_span("ask.suggest", t_start, tr.now_us() - t_start,
+                           kind=kind, n=self._n,
+                           bucket=int(self._x.shape[0]))
         return np.asarray(best_x), info
 
     def gp_state(self) -> GPState:

@@ -31,6 +31,8 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 
+from repro.obs.trace import instant as _obs_instant
+
 # cap per-instance event history: retraces are supposed to be rare, and
 # a misbehaving caller must not turn the sanitizer into a memory leak
 _MAX_EVENTS = 256
@@ -169,6 +171,10 @@ class CountingJit:
                     "program": self.name, "call": self.n_calls,
                     "compile": self.n_compiles, "cause": cause,
                     "detail": detail})
+            # flight recorder: every classified (re)trace is an instant,
+            # so a compile-count regression is visible on the timeline
+            _obs_instant("retrace", program=self.name, cause=cause,
+                         call=self.n_calls, compile=self.n_compiles)
             self._seen.append(sig)
         return out
 

@@ -42,6 +42,7 @@ import numpy as np
 from repro.core.lbfgsb import LbfgsbOptions, LbfgsbResult, lbfgsb_minimize
 from repro.engine.cache import CountingJit, retrace_report
 from repro.engine.plan import EvalPlan
+from repro.obs import trace as obs
 
 Array = jax.Array
 
@@ -95,6 +96,11 @@ class EvalEngine:
             return lbfgsb_minimize(fun, x0, lower, upper, opts)
 
         self._vec_jit = CountingJit(_run_lockstep, static_argnums=(4, 5))
+        # obs device-completion timing; passthrough with tracing off
+        self._eval_jit = obs.ProgramTimer(self._eval_jit,
+                                          "engine.program.eval")
+        self._vec_jit = obs.ProgramTimer(self._vec_jit,
+                                         "engine.program.lockstep")
 
     @property
     def n_compiles(self) -> int:

@@ -74,6 +74,7 @@ from repro.engine.ask import (_MSO_DEFAULT, SuggestInfo, incr_core,
 from repro.engine.cache import CountingJit, retrace_report
 from repro.engine.engine import EvalEngine
 from repro.engine.plan import EvalPlan
+from repro.obs import trace as obs
 from repro.gp.fit import (FIT_OPTS, _FAR, pad_bucket_for, standardize_masked,
                           theta_bounds, theta_init_grid, unpack_theta)
 from repro.gp.gpr import GPState
@@ -318,6 +319,15 @@ class FleetEngine:
         self._full_jit = CountingJit(full_impl, **jit_kw)
         self._incr_jit = CountingJit(incr_impl, **jit_kw)
         self._mso_jit = CountingJit(mso_impl, **jit_kw)
+        # obs device-completion timing (block-until-ready spans when the
+        # tracer is enabled; passthrough otherwise) — wrapped AFTER the
+        # CountingJit assignments so those call sites stay intact
+        self._full_jit = obs.ProgramTimer(self._full_jit,
+                                          "fleet.program.full")
+        self._incr_jit = obs.ProgramTimer(self._incr_jit,
+                                          "fleet.program.incr")
+        self._mso_jit = obs.ProgramTimer(self._mso_jit,
+                                         "fleet.program.mso")
         # a block spans the whole mesh: cfg.slots slots per device
         self._slots_total = cfg.slots * self._ndev
         self._dtype = jnp.asarray(0.0).dtype
@@ -374,6 +384,7 @@ class FleetEngine:
         if reason is not None:
             self.n_rejected += 1
             self._journal({"op": "reject", "sid": sid, "reason": reason})
+            obs.instant("fleet.reject", sid=str(sid), reason=reason)
             raise FleetFullError(reason)
         st = _Study(sid)
         if deadline is None and cfg.admission_timeout is not None:
@@ -410,6 +421,7 @@ class FleetEngine:
             # (compacted into a larger block) at the next trial boundary
             self.n_migrations += 1
             self._journal({"op": "migrate", "sid": sid, "n": st.n})
+            obs.instant("fleet.migrate", sid=str(sid), n=st.n)
             self._evict(st)
         else:
             i = st.n - 1
@@ -514,9 +526,15 @@ class FleetEngine:
                 raise ValueError(      # study must not wedge the fleet
                     f"study {st.sid!r} requested suggest() with "
                     f"{st.n} observations; needs >= 2")
+        tr = obs.get()
+        t0 = tr.now_us() if tr is not None else 0.0
         served = 0
         for blk in self._blocks:
-            served += self._step_block(blk)
+            with obs.span("fleet.step_block", bucket=blk.bucket):
+                served += self._step_block(blk)
+        if tr is not None and served:
+            tr.record_span("fleet.step", t0, tr.now_us() - t0,
+                           served=served, n_blocks=len(self._blocks))
         self.n_steps += 1 if served else 0
         return served
 
@@ -625,6 +643,7 @@ class FleetEngine:
         when it sees the state (``study_state``)."""
         self.n_shed += 1
         self._journal({"op": "shed", "sid": st.sid, "reason": reason})
+        obs.instant("fleet.shed", sid=str(st.sid), reason=reason)
         st.shed = reason
         st.pending = None
 
@@ -656,6 +675,8 @@ class FleetEngine:
                 jnp.asarray(st.theta_host, blk.theta.dtype)))
         self._journal({"op": "admit", "sid": st.sid,
                        "bucket": blk.bucket, "slot": slot, "n": n})
+        obs.instant("fleet.admit", sid=str(st.sid), bucket=blk.bucket,
+                    slot=slot, n=n)
         blk.studies[slot] = st
         st.block, st.slot = blk, slot
         if st.from_device is not None:       # bucket-growth re-admission
@@ -700,6 +721,7 @@ class FleetEngine:
         fail the pending request through the result mailbox."""
         self.n_parked += 1
         self._journal({"op": "park", "sid": st.sid, "reason": reason})
+        obs.instant("fleet.park", sid=str(st.sid), reason=reason)
         if st.block is not None:
             self._clear_slot(st)
         st.parked = reason
@@ -716,6 +738,8 @@ class FleetEngine:
         self.n_quarantined += 1
         self._journal({"op": "quarantine", "sid": st.sid, "trial": tag,
                        "x": x_bad.tolist(), "y": y_bad, "reason": reason})
+        obs.instant("fleet.quarantine", sid=str(st.sid),
+                    trial=str(tag), reason=reason)
         st.xs.pop()
         st.ys.pop()
         st.tags.pop()
@@ -879,6 +903,8 @@ class FleetEngine:
                                    "delay_s": delay,
                                    "sids": [blk.studies[s].sid
                                             for s in pending_full]})
+                    obs.instant("fleet.backoff", attempt=attempt + 1,
+                                delay_s=delay, n_studies=len(pending_full))
                     self._sleep(delay)
             nv = jnp.asarray(blk.n_valid())
             # parked studies dropped their requests mid-phase

@@ -75,6 +75,7 @@ import numpy as np
 
 from repro.bo.sampler import FleetSampler, Trial
 from repro.engine import FleetFullError
+from repro.obs import trace as obs
 
 RUNGS = ("admit", "reject", "degrade", "shed_tenant")
 
@@ -386,11 +387,13 @@ class BOService:
         self._release_delayed(now)
         self._expire_deadlines(now)
         self._update_rung(now)
-        batch = self._drr_schedule(now)
+        with obs.span("svc.drr_round", rung=RUNGS[self._rung]):
+            batch = self._drr_schedule(now)
         if not batch:
             return 0
         t0 = now
-        served = self._dispatch(batch)
+        with obs.span("svc.dispatch", n=len(batch)):
+            served = self._dispatch(batch)
         wall = self._now() - t0
         if (self.watchdog_slow_step is not None
                 and wall > self.watchdog_slow_step):
@@ -436,6 +439,8 @@ class BOService:
         also withdraws its fleet-side reservation."""
         self._journal({"op": "svc_shed", "req": req.rid,
                        "kind": "deadline", "reason": reason})
+        obs.instant("svc.shed", req=req.rid, tenant=req.tenant,
+                    kind="deadline", reason=reason)
         if req.attempts > 0 or req.state == "dispatched":
             self.fs.cancel_ask(req.study)
         req.state = "shed"
@@ -476,6 +481,8 @@ class BOService:
         self._journal({"op": "svc_overload", "rung": RUNGS[rung],
                        "from": RUNGS[prev], "depth": depth, "p99": p99,
                        "reason": why})
+        obs.instant("svc.rung_change", rung=RUNGS[rung],
+                    from_rung=RUNGS[prev], depth=depth, reason=why)
         self._rung, self._rung_reason = rung, why
         self.n_rung_changes += 1
         if rung >= 2 and prev < 2:
@@ -500,6 +507,7 @@ class BOService:
         reason = f"service overload degrade: {why}"
         self._journal({"op": "svc_degrade", "tenant": t.cfg.name,
                        "studies": list(t.cfg.studies), "reason": reason})
+        obs.instant("svc.degrade", tenant=t.cfg.name, reason=reason)
         t.degraded = reason
         for study in t.cfg.studies:
             s = self.fs.samplers[study]
@@ -518,6 +526,8 @@ class BOService:
                   [r.rid for r in self._delayed if r.tenant == t.cfg.name]
         self._journal({"op": "svc_shed_tenant", "tenant": t.cfg.name,
                        "reason": reason, "dropped": dropped})
+        obs.instant("svc.shed_tenant", tenant=t.cfg.name,
+                    n_dropped=len(dropped), reason=reason)
         t.shed = reason
         mine = list(t.queue) + [r for r in self._delayed
                                 if r.tenant == t.cfg.name]
@@ -620,6 +630,8 @@ class BOService:
             self._journal({"op": "svc_shed", "req": req.rid,
                            "kind": "failed",
                            "reason": f"retries exhausted: {err}"})
+            obs.instant("svc.shed", req=req.rid, tenant=req.tenant,
+                        kind="failed")
             req.state = "failed"
             req.error = RequestFailed(
                 f"request {req.rid}: {req.attempts} attempts failed; "
@@ -637,6 +649,8 @@ class BOService:
         self._journal({"op": "svc_retry", "req": req.rid,
                        "attempt": req.attempts, "delay_s": delay,
                        "not_before": not_before, "error": str(err)})
+        obs.instant("svc.retry", req=req.rid, tenant=req.tenant,
+                    attempt=req.attempts, delay_s=delay)
         req.not_before = not_before
         req.state = "delayed"
         self._delayed.append(req)
@@ -658,6 +672,7 @@ class BOService:
         queued = [r.rid for t in self._tenants.values() for r in t.queue]
         queued += [r.rid for r in self._delayed]
         self._journal({"op": "svc_drain", "queued": sorted(queued)})
+        obs.instant("svc.drain", n_queued=len(queued))
         self._draining = True
         now = self._now()
         for t in self._tenants.values():
